@@ -1,0 +1,58 @@
+"""Paper Figs 1/2: false-positive rate vs bits per element, QF vs BF.
+
+QF: fp ~= alpha * 2^-r at (r + 3) bits/slot = (r + 3)/alpha bits/elt.
+BF: fp = (1 - e^{-kn/m})^k at optimal k.  Empirical rates must match
+the analytic curves; derived column = empirical/analytic ratio.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bloom, quotient_filter as qf
+
+from .common import Row, keys_u32
+
+Q = 14
+LOAD = 0.75
+N_PROBES = 400_000
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(7)
+    n = int((1 << Q) * LOAD)
+    keys = keys_u32(rng, n)
+    probes = keys_u32(rng, N_PROBES, lo=2**31)
+
+    for r in (4, 6, 8, 10, 12):
+        cfg = qf.QFConfig(q=Q, r=r, slack=2048)
+        st = qf.insert(cfg, qf.empty(cfg), keys)
+        fp = float(qf.contains(cfg, st, probes).mean())
+        analytic = 1 - np.exp(-n / 2 ** (Q + r))
+        bits_per_elt = (r + 3) / LOAD
+        rows.append(
+            Row(
+                f"fprate_qf_r{r}",
+                bits_per_elt,  # (column reused: bits/element)
+                f"empirical={fp:.2e};analytic={analytic:.2e};"
+                f"ratio={fp / max(analytic, 1e-12):.2f}",
+            )
+        )
+
+    for bits in (6, 9, 12, 15):
+        k = bloom.optimal_k(bits)
+        m_bits = n * bits
+        bcfg = bloom.BloomConfig(m_bits=m_bits, k=k)
+        bbits = bloom.insert(bcfg, bloom.empty(bcfg), keys)
+        fp = float(bloom.lookup(bcfg, bbits, probes).mean())
+        analytic = (1 - np.exp(-k * n / m_bits)) ** k
+        rows.append(
+            Row(
+                f"fprate_bf_{bits}bpe",
+                float(bits),
+                f"empirical={fp:.2e};analytic={analytic:.2e};"
+                f"ratio={fp / max(analytic, 1e-12):.2f}",
+            )
+        )
+    return rows

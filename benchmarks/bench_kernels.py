@@ -1,0 +1,48 @@
+"""Pallas kernel timings (interpret mode) vs jnp reference paths.
+
+Interpret-mode wall time is NOT TPU performance — the derived column
+records bytes-touched per op so the TPU projection (819 GB/s HBM
+streaming) can be read off; correctness vs the oracle is asserted.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from repro.kernels import ops
+
+from .common import Row, keys_u32, time_fn
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(11)
+    cfg = qf.QFConfig(q=16, r=12, slack=2048)
+    n = 40_000
+    keys = keys_u32(rng, n)
+    fq, fr = qf.fingerprints(cfg, keys)
+    fq_s, fr_s = qf._pad_sort(fq, fr, jnp.ones(fq.shape, bool))
+
+    t_core = time_fn(lambda: qf.build_sorted(cfg, fq_s, fr_s, n))
+    t_kern = time_fn(lambda: ops.build_sorted(cfg, fq_s, fr_s, n))
+    st = qf.build_sorted(cfg, fq_s, fr_s, n)
+    st_k = ops.build_sorted(cfg, fq_s, fr_s, n)
+    assert all(
+        bool(jnp.all(a == b)) for a, b in zip(st, st_k)
+    ), "kernel build mismatch"
+    slot_bytes = cfg.total_slots * 7  # rem u32 + 3 bit-planes(bytes here)
+    rows.append(Row("kernel_qf_build_interp", t_kern * 1e6,
+                    f"jnp_ref_us={t_core*1e6:.0f};bytes={slot_bytes}"))
+
+    probes = keys_u32(rng, 1 << 14)
+    pq, pr = qf.fingerprints(cfg, probes)
+    t_ref = time_fn(lambda: qf.lookup(cfg, st, pq, pr))
+    t_k = time_fn(lambda: ops.lookup(cfg, st, pq, pr))
+    got = ops.lookup(cfg, st, pq, pr)
+    want = qf.lookup_exact(cfg, st, pq, pr)
+    assert bool(jnp.all(got == want)), "kernel probe mismatch"
+    rows.append(Row("kernel_qf_probe_interp", t_k * 1e6,
+                    f"jnp_windowed_us={t_ref*1e6:.0f};queries=16384"))
+    return rows

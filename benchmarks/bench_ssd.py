@@ -1,0 +1,129 @@
+"""Paper Table 1(b) + Figs 7/8: on-SSD AMQ comparison, small (1:4) and
+large (1:24) RAM-to-filter ratios.
+
+The SSD does not exist in this container; every structure logs its
+exact page-access schedule and the paper's measured X25-M constants
+(cost_model.PAPER_SSD) convert the schedule to modeled ops/s — the same
+bottom line the paper measures.  Structures are scaled down ~2^13 from
+the paper's 2GB RAM (ratios, not absolutes, are the reproducible
+quantity); the derived column carries the paper-comparable ratios:
+CF/BQF insert speedup over the best BF variant (paper: 8.6-11x), the
+CF-vs-BQF crossover at 1:24 (paper: CF 26% faster), and BQF lookup
+dominance (paper: >=1.6x).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bloom, quotient_filter as qf
+from repro.core.buffered_qf import BufferedQuotientFilter
+from repro.core.cascade_filter import CascadeFilter
+from repro.core.bf_variants import (
+    BufferedBloomFilter,
+    ElevatorBloomFilter,
+    ForestBloomFilter,
+)
+from repro.core.cost_model import PAPER_SSD, modeled_throughput
+
+from .common import Row, keys_u32
+
+RAM_Q = 11  # in-"RAM" QF buckets (paper: 2 GB)
+P_BITS = 26  # fingerprint bits -> fp ~ 1/4096 at these loads
+FP = 1 / 4096
+
+
+def _mk_structs(ratio: int, n_total: int):
+    disk_q = RAM_Q + max(2, int(np.ceil(np.log2(ratio * 1.8))))
+    bqf = BufferedQuotientFilter(
+        qf.QFConfig(q=RAM_Q, r=P_BITS - RAM_Q),
+        qf.QFConfig(q=disk_q, r=P_BITS - disk_q),
+    )
+    cf = CascadeFilter(ram_q=RAM_Q, p=P_BITS, fanout=2)
+    k = 12
+    m_bits = int(n_total * k / np.log(2))
+    ram_bits = m_bits // ratio
+    # the RAM buffer holds pending bit-WRITE entries (~8 B each), not bits
+    ebf = ElevatorBloomFilter(
+        bloom.BloomConfig(m_bits=m_bits, k=k), buffer_capacity_bits=ram_bits // 64
+    )
+    bbf = BufferedBloomFilter(
+        bloom.BloomConfig(m_bits=m_bits, k=k), ram_bytes=ram_bits // 8,
+        block_bytes=4096 * 8, page_bytes=512,
+    )
+    fbf = ForestBloomFilter(
+        bits_per_element=k / np.log(2), ram_bytes=ram_bits // 8,
+        total_elements=n_total,
+    )
+    return {"cf": cf, "bqf": bqf, "ebf": ebf, "bbf": bbf, "fbf": fbf}
+
+
+def _experiment(ratio: int, tag: str) -> list[Row]:
+    rng = np.random.default_rng(ratio)
+    cap_ram = qf.QFConfig(q=RAM_Q, r=1).capacity
+    n_total = int(ratio * cap_ram)
+    structs = _mk_structs(ratio, n_total)
+    all_keys = keys_u32(rng, n_total)
+
+    rows = []
+    ins_tput = {}
+    for name, s in structs.items():
+        step = max(256, n_total // 64)
+        for i in range(0, n_total, step):
+            s.insert(all_keys[i : i + step])
+        ins_tput[name] = modeled_throughput(n_total, s.io, PAPER_SSD)
+
+    # lookups: fresh io accounting
+    probes_uni = keys_u32(rng, 2048, lo=2**31)
+    probes_hit = all_keys[rng.integers(0, n_total, 2048)]
+    uni_tput, hit_tput = {}, {}
+    for name, s in structs.items():
+        before = s.io.snapshot()
+        r_uni = s.lookup(probes_uni)
+        mid = s.io.snapshot()
+        r_hit = s.lookup(probes_hit)
+        assert bool(jnp.asarray(r_hit).all()), f"{name}: false negative!"
+        uni_tput[name] = modeled_throughput(2048, mid.delta(before), PAPER_SSD)
+        hit_tput[name] = modeled_throughput(2048, s.io.snapshot().delta(mid), PAPER_SSD)
+
+    best_bf_ins = max(ins_tput[n] for n in ("ebf", "bbf", "fbf"))
+    for name in structs:
+        rows.append(
+            Row(
+                f"ssd_{tag}_insert_{name}",
+                1e6 / max(ins_tput[name], 1e-9),
+                f"modeled_ops/s={ins_tput[name]:.0f}"
+                + (
+                    f";vs_best_bf={ins_tput[name] / best_bf_ins:.1f}x"
+                    if name in ("cf", "bqf")
+                    else ""
+                ),
+            )
+        )
+        rows.append(
+            Row(
+                f"ssd_{tag}_lookup_uniform_{name}",
+                1e6 / max(uni_tput[name], 1e-9),
+                f"modeled_ops/s={uni_tput[name]:.0f}",
+            )
+        )
+        rows.append(
+            Row(
+                f"ssd_{tag}_lookup_success_{name}",
+                1e6 / max(hit_tput[name], 1e-9),
+                f"modeled_ops/s={hit_tput[name]:.0f}",
+            )
+        )
+    rows.append(
+        Row(
+            f"ssd_{tag}_cf_vs_bqf_insert",
+            0.0,
+            f"cf/bqf={ins_tput['cf'] / ins_tput['bqf']:.2f} (paper large: 1.26)",
+        )
+    )
+    return rows
+
+
+def run() -> list[Row]:
+    return _experiment(4, "small") + _experiment(24, "large")

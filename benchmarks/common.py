@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing + CSV rows."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
+    """Median wall seconds per call (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def keys_u32(rng, n, lo=0, hi=2**32):
+    import jax.numpy as jnp
+
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))

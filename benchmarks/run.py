@@ -1,0 +1,54 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV rows (per the scaffold contract)
+and writes experiments/bench_results.csv.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+MODULES = [
+    "bench_inram",      # Table 1a
+    "bench_ssd",        # Table 1b + Figs 7/8 (small + large)
+    "bench_fprate",     # Figs 1/2
+    "bench_clusters",   # Fig 4
+    "bench_occupancy",  # Fig 6
+    "bench_fanout",     # Fig 9 / §5.3
+    "bench_kernels",    # Pallas kernels (interpret)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        rows = mod.run()
+        for r in rows:
+            print(r.csv(), flush=True)
+        all_rows += rows
+        print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in all_rows:
+            f.write(r.csv() + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's data structures in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from repro.core.buffered_qf import BufferedQuotientFilter
+from repro.core.cascade_filter import CascadeFilter
+from repro.core.cost_model import PAPER_SSD, modeled_throughput
+
+
+def main():
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**32, 50_000, dtype=np.int64).astype(np.uint32))
+
+    # 1. Quotient filter (paper §3): insert / query / delete / resize
+    cfg = qf.QFConfig(q=16, r=12)  # 64k buckets, fp ~ alpha * 2^-12
+    st = qf.insert(cfg, qf.empty(cfg), keys[:40_000])
+    print("QF load:", float(qf.load(cfg, st)))
+    print("all present:", bool(qf.contains(cfg, st, keys[:40_000]).all()))
+    absent = jnp.asarray(rng.integers(0, 2**32, 100_000, dtype=np.int64).astype(np.uint32))
+    print("fp rate:", float(qf.contains(cfg, st, absent).mean()), "~", 0.61 * 2**-12)
+    st = qf.delete(cfg, st, keys[:10_000])
+    print("after delete:", int(st.n))
+    big_cfg, big_st = qf.resize(cfg, st, 17)  # double it, no rehash
+    print("resized still present:", bool(qf.contains(big_cfg, big_st, keys[10_000:40_000]).all()))
+
+    # 2. Buffered QF (paper §4): RAM buffer + sequential flush to "flash"
+    bqf = BufferedQuotientFilter(qf.QFConfig(q=12, r=16), qf.QFConfig(q=16, r=12))
+    for i in range(0, 50_000, 2_000):
+        bqf.insert(keys[i : i + 2_000])
+    print("BQF insert modeled ops/s on the paper's SSD:",
+          f"{modeled_throughput(50_000, bqf.io, PAPER_SSD):,.0f}")
+
+    # 3. Cascade filter (paper §4): LSM-of-QFs, insert-optimized
+    cf = CascadeFilter(ram_q=12, p=28, fanout=2)
+    for i in range(0, 50_000, 2_000):
+        cf.insert(keys[i : i + 2_000])
+    print("CF levels:", cf.n_nonempty_levels(),
+          "merges:", cf.io.merges,
+          "insert modeled ops/s:", f"{modeled_throughput(50_000, cf.io, PAPER_SSD):,.0f}")
+    print("CF membership:", bool(cf.lookup(keys[:5_000]).all()))
+
+
+if __name__ == "__main__":
+    main()

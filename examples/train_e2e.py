@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~130M-param model for a few hundred steps
+on the dedup'd synthetic stream, with checkpointing.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200]
+
+(Thin wrapper over repro.launch.train — the production entry point.)
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in args):
+        args += ["--steps", "200"]
+    raise SystemExit(
+        main(["--arch", "mamba2-130m", "--batch", "8", "--seq", "512",
+              "--ckpt-dir", "/tmp/repro_e2e_ckpt", "--ckpt-every", "50"] + args)
+    )

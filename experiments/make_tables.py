@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONs.
+
+Usage: python experiments/make_tables.py [dir] > table.md
+"""
+
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        j = json.load(open(os.path.join(d, f)))
+        out[(j["arch"], j["shape"], j.get("mesh", "16x16"))] = j
+    return out
+
+
+def fmt_cell(j):
+    if j["status"] == "skipped":
+        return None
+    if j["status"] == "error":
+        return {"status": "ERROR"}
+    r = j["roofline"]
+    m = j["memory"]
+    return {
+        "hbm": m["hbm_bytes_per_device"] / 2**30,
+        "fits": bool(m["fits_16GiB"]),
+        "tc": r["t_compute_s"],
+        "tm": r["t_memory_s"],
+        "tx": r["t_collective_s"],
+        "bound": r["bound"],
+        "uff": r["useful_flop_fraction"],
+        "mfu": r["roofline_mfu"],
+        "compile": j["compile_s"],
+    }
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    data = load(d)
+    meshes = sorted({k[2] for k in data})
+    for mesh in meshes:
+        print(f"\n### Mesh {mesh}\n")
+        print("| arch | shape | hbm/dev GiB | fits | t_compute s | t_memory s | t_coll s | bound | useful-flop frac | roofline MFU |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for (arch, shape, m), j in sorted(data.items()):
+            if m != mesh:
+                continue
+            c = fmt_cell(j)
+            if c is None:
+                print(f"| {arch} | {shape} | — | — | — | — | — | skipped (full-attention; see DESIGN.md §5) | — | — |")
+                continue
+            if c.get("status") == "ERROR":
+                print(f"| {arch} | {shape} | ERROR | | | | | | | |")
+                continue
+            print(
+                f"| {arch} | {shape} | {c['hbm']:.2f} | {'Y' if c['fits'] else 'N'} "
+                f"| {c['tc']:.4f} | {c['tm']:.4f} | {c['tx']:.4f} | {c['bound']} "
+                f"| {c['uff']:.2f} | {c['mfu']:.3f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Core library: the paper's AMQ data structures, bulk-parallel in JAX.
+
+Quotient filter (§3), buffered quotient filter and cascade filter (§4),
+plus the Bloom-filter baselines (§2) and the memory-hierarchy cost
+model that stands in for the paper's SSD.
+"""
+
+from . import bf_variants, bloom, cost_model, fingerprint, quotient_filter
+from .buffered_qf import BufferedQuotientFilter
+from .cascade_filter import CascadeFilter
+
+__all__ = [
+    "bf_variants",
+    "bloom",
+    "cost_model",
+    "fingerprint",
+    "quotient_filter",
+    "BufferedQuotientFilter",
+    "CascadeFilter",
+]

@@ -1,0 +1,102 @@
+"""Bloom filter baseline (paper §2), vectorized for the JAX port.
+
+Representation note: the canonical BF is a packed bit array.  XLA has
+no scatter-OR, so the device representation is one byte per bit with
+``.at[idx].max(1)`` scatter (duplicate-safe); *space accounting* (used
+by every benchmark and by the FP-rate math) is in bits, matching the
+paper.  The counting Bloom filter uses the same array as 8-bit
+counters (the paper's 4-bit counters would saturate identically for
+our workloads; space is accounted at 4 bits per counter, matching [3]).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .fingerprint import fmix32
+
+__all__ = [
+    "BloomConfig",
+    "optimal_k",
+    "empty",
+    "insert",
+    "lookup",
+    "bit_indices",
+    "counting_delete",
+]
+
+
+class BloomConfig(NamedTuple):
+    m_bits: int
+    k: int
+    seed: int = 0
+    counting: bool = False
+
+    @property
+    def size_bytes(self) -> int:
+        # modeled: 1 bit per cell (plain) / 4 bits per cell (counting)
+        return (self.m_bits * (4 if self.counting else 1) + 7) // 8
+
+
+def optimal_k(bits_per_element: float) -> int:
+    """k = (m/n) ln 2, the paper's optimal hash count."""
+    import math
+
+    return max(1, round(bits_per_element * math.log(2)))
+
+
+def empty(cfg: BloomConfig) -> jnp.ndarray:
+    return jnp.zeros((cfg.m_bits,), jnp.uint8)
+
+
+def bit_indices(cfg: BloomConfig, keys: jnp.ndarray) -> jnp.ndarray:
+    """(B, k) bit positions via double hashing h1 + i*h2 (Kirsch-Mitzenmacher)."""
+    k32 = keys.astype(jnp.uint32)
+    h1 = fmix32(k32 ^ jnp.uint32(cfg.seed * 2 + 0x7F4A7C15))
+    h2 = fmix32(k32 ^ jnp.uint32(cfg.seed * 2 + 0x94D049BB)) | jnp.uint32(1)
+    i = jnp.arange(cfg.k, dtype=jnp.uint32)
+    idx = (h1[:, None] + i[None, :] * h2[:, None]) % jnp.uint32(cfg.m_bits)
+    return idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg: BloomConfig, bits: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    idx = bit_indices(cfg, keys).reshape(-1)
+    if cfg.counting:
+        return bits.at[idx].add(jnp.uint8(1))
+    return bits.at[idx].max(jnp.uint8(1))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def counting_delete(cfg: BloomConfig, bits: jnp.ndarray, keys: jnp.ndarray):
+    if not cfg.counting:
+        raise ValueError("delete requires a counting Bloom filter")
+    idx = bit_indices(cfg, keys).reshape(-1)
+    return bits.at[idx].add(jnp.uint8(255))  # wrapping -1
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: BloomConfig, bits: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """MAY-CONTAIN: AND of the k probed cells."""
+    idx = bit_indices(cfg, keys)
+    return jnp.all(bits[idx] > 0, axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def probes_until_reject(cfg: BloomConfig, bits: jnp.ndarray, keys: jnp.ndarray):
+    """Number of cells a short-circuiting lookup reads per key.
+
+    The paper's I/O analysis hinges on this: an absent key reads ~2
+    cells in expectation, a present key reads all k.  Used by the
+    EBF/BBF page-accounting.
+    """
+    idx = bit_indices(cfg, keys)
+    vals = bits[idx] > 0
+    # first zero position (k if none)
+    anyz = jnp.any(~vals, axis=1)
+    first0 = jnp.argmax(~vals, axis=1)
+    return jnp.where(anyz, first0 + 1, cfg.k), idx

@@ -1,0 +1,102 @@
+"""Vectorized fingerprinting for AMQ structures.
+
+The paper hashes every key to a p-bit fingerprint f, split as
+``f_q = f >> r`` (quotient) and ``f_r = f mod 2**r`` (remainder).
+
+TPU adaptation: the VPU is 32-bit-lane hardware and jax defaults to
+32-bit integers, so the conceptual 64-bit hash is carried as two 32-bit
+words (hi, lo) produced by independent murmur3 fmix32 streams.  The
+fingerprint is the **top p = q + r bits** of (hi:lo); bit extraction is
+done with static python-int shifts so quotient/remainder stay
+*consistent across any (q, r) split of the same p* — which is what
+makes the paper's resize (borrow a bit from the remainder) and merge
+(re-quotient to a larger table) operations exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "fmix32",
+    "hash2",
+    "fingerprint",
+    "extract_bits",
+    "fold_bytes",
+]
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer — a full-avalanche mixer (vectorized)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash2(keys: jnp.ndarray, seed: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two independent 32-bit hash words (hi, lo) per key = one 64-bit hash."""
+    k = keys.astype(jnp.uint32)
+    s = jnp.uint32(seed)
+    hi = fmix32(k ^ fmix32(s * jnp.uint32(2) + jnp.uint32(1)))
+    lo = fmix32((k + _GOLDEN) ^ fmix32(s * jnp.uint32(2) + jnp.uint32(2)))
+    return hi, lo
+
+
+def _mask(width: int) -> jnp.ndarray:
+    return jnp.uint32(0xFFFFFFFF if width >= 32 else (1 << width) - 1)
+
+
+def extract_bits(hi: jnp.ndarray, lo: jnp.ndarray, start: int, width: int):
+    """Bits [start, start+width) of the 64-bit word (hi:lo), MSB-first.
+
+    All shifts are static python ints (no dynamic shift hazards).
+    width <= 32.
+    """
+    if not (0 < width <= 32 and 0 <= start and start + width <= 64):
+        raise ValueError(f"bad bit slice start={start} width={width}")
+    end = start + width
+    if end <= 32:
+        return (hi >> jnp.uint32(32 - end)) & _mask(width)
+    if start >= 32:
+        return (lo >> jnp.uint32(64 - end)) & _mask(width)
+    hi_bits = 32 - start
+    lo_bits = end - 32
+    hipart = hi & _mask(hi_bits)
+    return ((hipart << jnp.uint32(lo_bits)) | (lo >> jnp.uint32(32 - lo_bits))) & _mask(
+        width
+    )
+
+
+def fingerprint(keys: jnp.ndarray, q: int, r: int, seed: int = 0):
+    """keys -> (quotient int32 (B,), remainder uint32 (B,)).
+
+    quotient = top q bits of the 64-bit hash, remainder = next r bits.
+    """
+    if not (1 <= q <= 30):
+        raise ValueError(f"q must be in [1, 30], got {q}")
+    if not (1 <= r <= 32):
+        raise ValueError(f"r must be in [1, 32], got {r}")
+    hi, lo = hash2(keys, seed)
+    fq = extract_bits(hi, lo, 0, q).astype(jnp.int32)
+    fr = extract_bits(hi, lo, q, r)
+    return fq, fr
+
+
+def fold_bytes(data: bytes, seed: int = 0) -> int:
+    """Host-side FNV-1a fold of arbitrary bytes to a 32-bit key.
+
+    Used by the data pipeline to digest documents before the on-device
+    fingerprint path (mirrors the paper's "512-bit hash per item" setup:
+    upstream produces a wide digest, the filter consumes what it needs).
+    """
+    h = (0x811C9DC5 ^ seed) & 0xFFFFFFFF
+    for b in data:
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h

@@ -1,0 +1,161 @@
+"""Streaming data pipeline with cascade-filter deduplication.
+
+This is the paper's application layer (§1 "Applications"): a
+decoupled-insert/query workload where every incoming document's digest
+is checked against — and inserted into — an AMQ before tokenization.
+Duplicates (or probable duplicates, at the filter's FP rate) are
+dropped.  The filter state checkpoints with the pipeline and its merge
+operation makes checkpoint consolidation cheap.
+
+Stages: synthetic corpus -> digest -> CF dedup -> tokenize (hash stub)
+-> pack to fixed-length rows -> global batch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.cascade_filter import CascadeFilter
+from repro.core import quotient_filter as qf
+
+
+@dataclass
+class PipelineConfig:
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    batch_size: int = 8
+    dedup_ram_q: int = 16  # Q0 buckets of the cascade filter
+    dedup_p: int = 30  # fingerprint bits (fp rate ~ n * 2^-p)
+    dedup_fanout: int = 4
+    duplicate_fraction: float = 0.3  # synthetic corpus duplication rate
+    doc_len_range: tuple = (64, 512)
+    seed: int = 0
+
+
+@dataclass
+class PipelineState:
+    docs_seen: int = 0
+    docs_kept: int = 0
+    docs_dropped: int = 0
+    token_backlog: list = field(default_factory=list)
+
+
+class SyntheticCorpus:
+    """Deterministic document stream with injected duplicates —
+    the Webtable-style crawl in miniature."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._originals: list[int] = []
+
+    def batch(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (doc_ids uint32, is_dup bool) for n documents."""
+        ids = np.empty(n, np.uint32)
+        dup = np.zeros(n, bool)
+        for i in range(n):
+            if self._originals and self.rng.random() < self.cfg.duplicate_fraction:
+                ids[i] = self.rng.choice(self._originals[-10_000:])
+                dup[i] = True
+            else:
+                new = np.uint32(self.rng.integers(0, 2**32, dtype=np.uint64))
+                ids[i] = new
+                self._originals.append(int(new))
+        return ids, dup
+
+    def tokens_for(self, doc_id: int) -> np.ndarray:
+        """Stub tokenizer: deterministic token stream from the digest."""
+        r = np.random.default_rng(int(doc_id))
+        n = r.integers(*self.cfg.doc_len_range)
+        return r.integers(1, self.cfg.vocab_size, size=n, dtype=np.int32)
+
+
+class DedupPipeline:
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self.corpus = SyntheticCorpus(cfg)
+        self.filter = CascadeFilter(
+            ram_q=cfg.dedup_ram_q, p=cfg.dedup_p, fanout=cfg.dedup_fanout
+        )
+        self.state = PipelineState()
+
+    def _dedup(self, doc_ids: np.ndarray) -> np.ndarray:
+        """Returns keep-mask; inserts the kept digests into the filter.
+
+        Also dedups within the incoming batch itself (first occurrence
+        wins), exactly like a streaming crawler would."""
+        keys = jnp.asarray(doc_ids, jnp.uint32)
+        seen = np.asarray(self.filter.lookup(keys))
+        _, first_idx = np.unique(doc_ids, return_index=True)
+        first_occurrence = np.zeros(len(doc_ids), bool)
+        first_occurrence[first_idx] = True
+        keep = (~seen) & first_occurrence
+        if keep.any():
+            self.filter.insert(jnp.asarray(doc_ids[keep], jnp.uint32))
+        return keep
+
+    def batches(self, n_batches: int, docs_per_step: int = 256) -> Iterator[dict]:
+        """Yields training batches of packed token rows."""
+        cfg = self.cfg
+        need = cfg.seq_len * cfg.batch_size + 1
+        backlog = self.state.token_backlog
+        for _ in range(n_batches):
+            while sum(len(t) for t in backlog) < need:
+                ids, _ = self.corpus.batch(docs_per_step)
+                keep = self._dedup(ids)
+                self.state.docs_seen += len(ids)
+                self.state.docs_kept += int(keep.sum())
+                self.state.docs_dropped += int((~keep).sum())
+                for d in ids[keep]:
+                    backlog.append(self.corpus.tokens_for(int(d)))
+            flat = np.concatenate(backlog)
+            take = flat[:need]
+            rest = flat[need - 1 :]  # keep one-token overlap for targets
+            self.state.token_backlog = [rest]
+            backlog = self.state.token_backlog
+            rows = take[: cfg.seq_len * cfg.batch_size].reshape(
+                cfg.batch_size, cfg.seq_len
+            )
+            tgts = take[1 : cfg.seq_len * cfg.batch_size + 1].reshape(
+                cfg.batch_size, cfg.seq_len
+            )
+            yield {
+                "tokens": jnp.asarray(rows, jnp.int32),
+                "targets": jnp.asarray(tgts, jnp.int32),
+            }
+
+    # -- checkpointable state ------------------------------------------------
+
+    def snapshot(self) -> dict:
+        lvls = []
+        for c, s in self.filter.levels:
+            lvls.append(
+                {
+                    "q": c.q,
+                    **{k: np.asarray(v) for k, v in s._asdict().items()},
+                }
+            )
+        return {
+            "docs_seen": self.state.docs_seen,
+            "docs_kept": self.state.docs_kept,
+            "docs_dropped": self.state.docs_dropped,
+            "q0": {k: np.asarray(v) for k, v in self.filter.q0._asdict().items()},
+            "levels": lvls,
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.state.docs_seen = int(snap["docs_seen"])
+        self.state.docs_kept = int(snap["docs_kept"])
+        self.state.docs_dropped = int(snap["docs_dropped"])
+        self.filter.q0 = qf.QFState(**{k: jnp.asarray(v) for k, v in snap["q0"].items()})
+        self.filter.levels = []
+        for lv in snap["levels"]:
+            c = self.filter._cfg(int(lv["q"]))
+            s = qf.QFState(
+                **{k: jnp.asarray(v) for k, v in lv.items() if k != "q"}
+            )
+            self.filter.levels.append((c, s))

@@ -1,0 +1,118 @@
+"""jit'd wrappers binding the Pallas kernels to the core QF state.
+
+``interpret=True`` (default here) runs the kernel bodies in Python on
+CPU — the validation mode for this container; on real TPUs the same
+calls compile via Mosaic (`interpret=False`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from .qf_build import qf_build_planes
+from .qf_probe import qf_probe_tiles
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("interpret", "block_s"))
+def build_sorted(
+    cfg: qf.QFConfig,
+    fq: jnp.ndarray,
+    fr: jnp.ndarray,
+    n,
+    *,
+    interpret: bool = True,
+    block_s: int = 256,
+) -> qf.QFState:
+    """Kernel-backed equivalent of ``quotient_filter.build_sorted``.
+
+    Probe positions and metadata bits are one cheap scan in jnp; the
+    bandwidth-bound plane materialization runs in the Pallas kernel.
+    """
+    if cfg.r > 31:
+        raise ValueError("kernel path packs remainders in int32 lanes (r <= 31)")
+    t = cfg.total_slots
+    nn = jnp.asarray(n, jnp.int32)
+    idx = jnp.arange(fq.shape[0], dtype=jnp.int32)
+    valid = idx < nn
+
+    pos = idx + jax.lax.cummax(jnp.where(valid, fq, -INT32_MAX) - idx)
+    overflow = jnp.any(valid & (pos >= t))
+    spos = jnp.where(valid, pos, INT32_MAX)
+    con_b = valid & (idx > 0) & (fq == jnp.roll(fq, 1))
+    shf_b = valid & (pos != fq)
+    meta_bits = con_b.astype(jnp.int32) | (shf_b.astype(jnp.int32) << 1)
+
+    rem_i32, meta = qf_build_planes(
+        spos, fr, meta_bits, t, block_s=block_s, interpret=interpret
+    )
+    occ = (
+        jnp.zeros((t,), jnp.bool_)
+        .at[jnp.where(valid, fq, INT32_MAX)]
+        .set(True, mode="drop")
+    )
+    return qf.QFState(
+        rem=rem_i32.astype(jnp.uint32),
+        occ=occ,
+        shf=(meta >> 1) > 0,
+        con=(meta & 1) > 0,
+        n=nn,
+        overflow=overflow,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("interpret", "tile_t", "wblk")
+)
+def lookup(
+    cfg: qf.QFConfig,
+    state: qf.QFState,
+    fq: jnp.ndarray,
+    fr: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    tile_t: int = 128,
+    wblk: int = 1024,
+):
+    """Kernel-backed MAY-CONTAIN; overflows resolve on the exact path."""
+    B0 = fq.shape[0]
+    order = jnp.argsort(fq)
+    pad = (-B0) % tile_t
+    osort = jnp.concatenate([order, jnp.full((pad,), order[-1])]) if pad else order
+    fq_s = fq[osort]
+    fr_s = fr[osort]
+
+    present_s, ovf_s = qf_probe_tiles(
+        state.rem.astype(jnp.int32),
+        state.occ.astype(jnp.int32),
+        state.shf.astype(jnp.int32),
+        state.con.astype(jnp.int32),
+        fq_s,
+        fr_s,
+        tile_t=tile_t,
+        wblk=wblk,
+        interpret=interpret,
+    )
+    # un-permute (padding wrote duplicates of a real slot; last write wins
+    # with identical values, so it is harmless)
+    present = jnp.zeros((B0,), jnp.int32).at[osort].set(present_s, mode="drop")
+    ovf = jnp.zeros((B0,), jnp.int32).at[osort].max(ovf_s, mode="drop")
+
+    def resolve(args):
+        present, ovf = args
+        exact = qf.lookup_exact(cfg, state, fq, fr)
+        return jnp.where(ovf > 0, exact, present > 0)
+
+    return jax.lax.cond(
+        jnp.any(ovf > 0), resolve, lambda a: a[0] > 0, (present, ovf)
+    )
+
+
+def contains(cfg: qf.QFConfig, state: qf.QFState, keys: jnp.ndarray, **kw):
+    fq, fr = qf.fingerprints(cfg, keys)
+    return lookup(cfg, state, fq, fr, **kw)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: bulk quotient-filter build (slot-plane emit).
+
+The bulk-parallel QF write path (DESIGN.md §2) is: sort fingerprints,
+compute probe positions with one cummax scan, then *materialize* the
+slot planes — a streaming, bandwidth-bound scatter of n items into
+m + slack slots.  This kernel tiles that materialization:
+
+grid = one program per S-slot output tile.  Because probe positions are
+strictly increasing, the items landing in an S-slot tile are a
+contiguous range of at most S items, whose location is scalar-prefetched
+(`blk[t]` = item-block index).  Each program loads two consecutive
+S-item blocks (covering any alignment), builds an (2S x S) match matrix
+``pos - tile_base == lane`` and reduces it onto the tile — pure VPU
+work, no data-dependent control flow, VMEM-resident.
+
+The is_occupied plane is a trivial one-line scatter handled by the
+wrapper (ops.py); this kernel emits the payload planes (remainder +
+is_shifted/is_continuation), which dominate bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _build_kernel(blk_ref, pos_a, pos_b, fr_a, fr_b, mb_a, mb_b, rem_o, meta_o):
+    t = pl.program_id(0)
+    S = rem_o.shape[1]
+    base = t * S
+
+    w_pos = jnp.concatenate([pos_a[0, :], pos_b[0, :]])  # (2S,)
+    w_fr = jnp.concatenate([fr_a[0, :], fr_b[0, :]])
+    w_mb = jnp.concatenate([mb_a[0, :], mb_b[0, :]])
+
+    rel = w_pos - base  # (2S,) ; outside [0, S) contributes nothing
+    cols = jax.lax.broadcasted_iota(jnp.int32, (2 * S, S), 1)
+    hit = rel[:, None] == cols  # (2S, S) one-hot by construction
+
+    rem_o[0, :] = jnp.sum(jnp.where(hit, w_fr[:, None], 0), axis=0)
+    meta_o[0, :] = jnp.sum(jnp.where(hit, w_mb[:, None], 0), axis=0)
+
+
+def qf_build_planes(
+    pos: jnp.ndarray,
+    fr: jnp.ndarray,
+    meta_bits: jnp.ndarray,
+    total_slots: int,
+    *,
+    block_s: int = 256,
+    interpret: bool = True,
+):
+    """Scatter items (pos strictly increasing, INT32_MAX padding) into
+    (rem, meta) planes of length total_slots.
+
+    meta_bits packs is_continuation | is_shifted << 1 per item.
+    """
+    S = block_s
+    n_tiles = -(-total_slots // S)
+    t_pad = n_tiles * S
+
+    # pad item arrays to a whole number of S-blocks plus one sentinel block
+    n = pos.shape[0]
+    n_blocks = -(-n // S) + 1
+    pad = n_blocks * S - n
+    pos_p = jnp.concatenate([pos, jnp.full((pad,), jnp.int32(2**31 - 1))])
+    fr_p = jnp.concatenate([fr.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    mb_p = jnp.concatenate([meta_bits.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    pos2 = pos_p.reshape(n_blocks, S)
+    fr2 = fr_p.reshape(n_blocks, S)
+    mb2 = mb_p.reshape(n_blocks, S)
+
+    # scalar prefetch: first item-block feeding each output tile
+    starts = jnp.searchsorted(pos_p, jnp.arange(n_tiles, dtype=jnp.int32) * S)
+    blk = jnp.minimum(starts // S, n_blocks - 2).astype(jnp.int32)
+
+    win = lambda off: pl.BlockSpec((1, S), lambda t, blk: (blk[t] + off, 0))
+    out = pl.BlockSpec((1, S), lambda t, blk: (t, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[win(0), win(1), win(0), win(1), win(0), win(1)],
+        out_specs=[out, out],
+    )
+    rem2, meta2 = pl.pallas_call(
+        _build_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, S), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, S), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blk, pos2, pos2, fr2, fr2, mb2, mb2)
+    rem = rem2.reshape(t_pad)[:total_slots]
+    meta = meta2.reshape(t_pad)[:total_slots]
+    return rem, meta

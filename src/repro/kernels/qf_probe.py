@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: bulk quotient-filter membership probe.
+
+The paper's lookup reads one *cluster* — one contiguous region — per
+query (its whole point vs. the Bloom filter's k random reads).  The TPU
+mapping (DESIGN.md §2): queries are sorted by quotient and tiled; each
+program serves T queries from a shared 2*WBLK-slot window of the filter
+whose aligned start is scalar-prefetched per tile.  Sorted queries make
+neighbouring windows coalesce, so HBM traffic is a linear stream over
+the touched region instead of random gathers.
+
+In-window cluster decode is branch-free rank/select arithmetic over a
+(T x 2*WBLK) broadcast: anchor = last unshifted slot left of the
+quotient, R = occupied count to the bucket, run = R-th run-start after
+the anchor (via a shared cumsum), then a remainder compare — the
+vectorized form of the paper's Fig. 3 walk.
+
+Queries whose tile span or cluster exceeds the window raise a per-query
+overflow flag; the wrapper (ops.py) resolves those on the exact path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _probe_kernel(
+    blk_ref,
+    wbase_ref,
+    rem_a,
+    rem_b,
+    occ_a,
+    occ_b,
+    shf_a,
+    shf_b,
+    con_a,
+    con_b,
+    fq_ref,
+    fr_ref,
+    present_o,
+    ovf_o,
+):
+    t = pl.program_id(0)
+    T = fq_ref.shape[1]
+    WT = 2 * rem_a.shape[1]
+
+    w_rem = jnp.concatenate([rem_a[0, :], rem_b[0, :]])  # (WT,)
+    w_occ = jnp.concatenate([occ_a[0, :], occ_b[0, :]]) > 0
+    w_shf = jnp.concatenate([shf_a[0, :], shf_b[0, :]]) > 0
+    w_con = jnp.concatenate([con_a[0, :], con_b[0, :]]) > 0
+    nonempty = w_occ | w_shf
+
+    # shared over the tile: run-start prefix counts
+    run_start = (nonempty & ~w_con).astype(jnp.int32)
+    cum = jnp.cumsum(run_start.reshape(1, WT), axis=1)[0]  # (WT,)
+
+    fq = fq_ref[0, :]
+    fr = fr_ref[0, :]
+    rel = fq - wbase_ref[t]  # (T,) in [0, WT) when tile fits
+
+    js = jax.lax.broadcasted_iota(jnp.int32, (T, WT), 1)
+    relc = rel[:, None]
+
+    at_q = js == relc
+    occ_q = jnp.any(at_q & w_occ[None, :], axis=1)
+
+    # anchor: largest j <= rel with !is_shifted
+    m1 = (~w_shf)[None, :] & (js <= relc)
+    b = jnp.max(jnp.where(m1, js, -1), axis=1)  # (T,)
+    ovf_left = b < 0
+
+    # R = #occupied buckets in [b, fq]
+    R = jnp.sum(
+        (w_occ[None, :] & (js >= b[:, None]) & (js <= relc)).astype(jnp.int32),
+        axis=1,
+    )
+    cum_before = jnp.sum(
+        jnp.where(js == (b - 1)[:, None], cum[None, :], 0), axis=1
+    )  # 0 when b == 0
+    C = cum_before + R
+
+    in_run = (cum[None, :] == C[:, None]) & nonempty[None, :]
+    present = occ_q & jnp.any(in_run & (w_rem[None, :] == fr[:, None]), axis=1)
+
+    ovf_right = in_run[:, -1]
+    ovf_nostart = occ_q & ~ovf_left & (cum[-1] < C)
+    ovf = occ_q & (ovf_left | ovf_right | ovf_nostart)
+
+    present_o[0, :] = present.astype(jnp.int32)
+    ovf_o[0, :] = ovf.astype(jnp.int32)
+
+
+def qf_probe_tiles(
+    rem: jnp.ndarray,
+    occ: jnp.ndarray,
+    shf: jnp.ndarray,
+    con: jnp.ndarray,
+    fq_sorted: jnp.ndarray,
+    fr_sorted: jnp.ndarray,
+    *,
+    tile_t: int = 128,
+    wblk: int = 1024,
+    interpret: bool = True,
+):
+    """Probe sorted queries. Returns (present, overflow) int32 (B,).
+
+    Planes are int32; fq_sorted must be ascending, padded to a multiple
+    of tile_t (duplicate-last padding preserves sortedness).  Tiles
+    whose quotient span exceeds the window report overflow for all
+    their queries (handled by the caller's exact path).
+    """
+    total = rem.shape[0]
+    B = fq_sorted.shape[0]
+    assert B % tile_t == 0
+    n_tiles = B // tile_t
+
+    nbw = -(-total // wblk) + 1  # plus one zero (empty-slot) block
+    tpad = nbw * wblk
+
+    def pad_plane(x):
+        return jnp.concatenate(
+            [x.astype(jnp.int32), jnp.zeros((tpad - total,), jnp.int32)]
+        ).reshape(nbw, wblk)
+
+    rem2, occ2, shf2, con2 = map(pad_plane, (rem, occ, shf, con))
+    fq2 = fq_sorted.reshape(n_tiles, tile_t)
+    fr2 = fr_sorted.astype(jnp.int32).reshape(n_tiles, tile_t)
+
+    min_fq = fq2[:, 0]
+    max_fq = fq2[:, -1]
+    blk = jnp.clip((min_fq - wblk // 4) // wblk, 0, nbw - 2).astype(jnp.int32)
+    wbase = blk * wblk
+    tile_fits = (max_fq - wbase) < (2 * wblk - wblk // 4)  # room for run tail
+
+    win = lambda off: pl.BlockSpec((1, wblk), lambda t, blk, wbase: (blk[t] + off, 0))
+    qspec = pl.BlockSpec((1, tile_t), lambda t, blk, wbase: (t, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[win(0), win(1)] * 4 + [qspec, qspec],
+        out_specs=[qspec, qspec],
+    )
+    present2, ovf2 = pl.pallas_call(
+        _probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, tile_t), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, tile_t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blk, wbase, rem2, rem2, occ2, occ2, shf2, shf2, con2, con2, fq2, fr2)
+
+    ovf2 = ovf2 | (~tile_fits[:, None]).astype(jnp.int32)
+    return present2.reshape(B), ovf2.reshape(B)

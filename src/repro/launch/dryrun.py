@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or
+2x16x16 multi-pod), constructs abstract (ShapeDtypeStruct) inputs and
+parameter/optimizer/cache shardings, and runs ``.lower().compile()`` on
+the real step function.  Success proves the distribution config is
+coherent: every sharding divides, every collective is supported, and
+``memory_analysis()`` shows the per-chip footprint.  Roofline terms are
+derived from ``cost_analysis()`` + the optimized HLO (see roofline.py)
+and written as JSON for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs import ARCHS, get_config
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+from repro.models import model
+from repro.serve.serve_step import cache_pspecs
+from repro.train import optimizer as optim
+from repro.train import train_step as ts
+
+# per-arch overrides that make the big cells fit 16 GiB/chip
+DRYRUN_OVERRIDES = {
+    "grok-1-314b": dict(opt_dtype="bfloat16", microbatches=8),
+    "starcoder2-15b": dict(opt_dtype="bfloat16"),
+    "deepseek-v2-lite-16b": dict(opt_dtype="bfloat16", microbatches=2),
+    "whisper-large-v3": dict(microbatches=2),
+    "qwen2-vl-7b": dict(microbatches=2),
+    "recurrentgemma-9b": dict(microbatches=4),
+}
+
+
+def _named(mesh, tree_pspec):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, microbatches: int = 1):
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = shd.ShardingRules.for_config(mesh, cfg, decode=(spec.kind == "decode"))
+    ov = DRYRUN_OVERRIDES.get(arch, {})
+    ocfg = optim.OptConfig(opt_dtype=ov.get("opt_dtype", "float32"))
+    if microbatches == 1:
+        microbatches = ov.get("microbatches", 1)
+
+    t0 = time.time()
+    if spec.kind == "train":
+        state_abs = ts.abstract_state(cfg, ocfg)
+        state_sh = _named(mesh, ts.state_pspecs(cfg, ocfg, rules))
+        batch_abs = input_specs(cfg, shape_name)["batch"]
+        bspec = {
+            k: rules.spec(("batch",) + (None,) * (v.ndim - 1), v.shape)
+            for k, v in batch_abs.items()
+        }
+        batch_sh = _named(mesh, bspec)
+        step = ts.make_train_step(cfg, ocfg, microbatches=microbatches, remat=True)
+
+        def wrapped(state, batch):
+            with shd.use_rules(rules):
+                return step(state, batch)
+
+        with mesh:
+            lowered = jax.jit(
+                wrapped,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+    elif spec.kind == "prefill":
+        params_abs = model.abstract(cfg)
+        params_sh = _named(mesh, model.partition_pspecs(cfg, rules))
+        batch_abs = input_specs(cfg, shape_name)["batch"]
+        bspec = {
+            k: rules.spec(("batch",) + (None,) * (v.ndim - 1), v.shape)
+            for k, v in batch_abs.items()
+        }
+        batch_sh = _named(mesh, bspec)
+
+        def prefill_step(params, batch):
+            with shd.use_rules(rules):
+                return model.prefill(params, cfg, batch, remat=True, headroom=0)
+
+        with mesh:
+            lowered = jax.jit(
+                prefill_step, in_shardings=(params_sh, batch_sh)
+            ).lower(params_abs, batch_abs)
+    else:  # decode
+        params_abs = model.abstract(cfg)
+        params_sh = _named(mesh, model.partition_pspecs(cfg, rules))
+        specs = input_specs(cfg, shape_name)
+        cache_abs, tokens_abs = specs["cache"], specs["tokens"]
+        cache_sh = _named(mesh, cache_pspecs(cfg, rules, cache_abs))
+        tok_sh = NamedSharding(
+            mesh, rules.spec(("batch", None), tokens_abs.shape)
+        )
+
+        def serve_step(params, cache, tokens):
+            with shd.use_rules(rules):
+                return model.decode_step(params, cfg, cache, tokens)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, tokens_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # trip-count-aware analysis (raw cost_analysis counts loop bodies once)
+    from repro.launch import hlo_analysis as H
+
+    hlo = H.analyze(compiled.as_text())
+    coll = hlo["collectives"]
+    mf = rf.model_flops_estimate(cfg, spec.kind, spec.batch, spec.seq)
+    roof = rf.Roofline(
+        flops=float(hlo["flops"]),
+        bytes_accessed=float(hlo["bytes"]),
+        coll_bytes=float(coll["total"]),
+        chips=chips,
+        model_flops=mf,
+    )
+    arg_b = int(mem.argument_size_in_bytes)
+    tmp_b = int(mem.temp_size_in_bytes)
+    out_b = int(mem.output_size_in_bytes)
+    alias_b = int(mem.alias_size_in_bytes)
+    hbm = arg_b + tmp_b + out_b - alias_b
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": arg_b,
+            "temp_bytes": tmp_b,
+            "output_bytes": out_b,
+            "alias_bytes": alias_b,
+            "hbm_bytes_per_device": hbm,
+            "fits_16GiB": hbm < 16 * 2**30,
+        },
+        "collectives": coll,
+        "roofline": roof.as_dict(),
+        "raw_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                res = lower_cell(arch, shape, multi_pod=mp, microbatches=args.microbatches)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                res = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                m = res["memory"]
+                extra = (
+                    f" hbm/dev={m['hbm_bytes_per_device']/2**30:.2f}GiB"
+                    f" fits={m['fits_16GiB']}"
+                    f" bound={res['roofline']['bound']}"
+                    f" mfu={res['roofline']['roofline_mfu']:.3f}"
+                )
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~n_layers.
+This module parses the optimized HLO text, builds the computation call
+graph (while bodies carry ``known_trip_count`` in backend_config), and
+aggregates:
+
+  * flops       — dots exactly (2·M·K·N via operand-shape lookup),
+                  elementwise/reduce approximately (1/elt)
+  * bytes       — operand + output bytes per top-level op; fusion
+                  internals excluded (a fusion is one read + one write)
+  * collectives — per-kind byte totals (output-shape convention),
+                  multiplied through loop trip counts
+
+Used by the dry-run and the §Perf iteration loop as the "profile".
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "token": 0, "opaque": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\(.*?\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "and", "or", "xor", "not", "compare", "select", "exponential",
+    "tanh", "log", "rsqrt", "sqrt", "power", "negate", "abs",
+    "floor", "ceil", "sign", "clamp", "cosine", "sine", "logistic",
+    "expm1", "log1p", "round-nearest-even", "remainder", "atan2",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    """(elements, bytes) summed over every dtype[dims] in text."""
+    elems = tot = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES[dt]
+    return elems, tot
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+    @property
+    def out_elems(self) -> int:
+        return _shape_elems_bytes(self.shape)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.shape)[1]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # instr name -> shape str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.entry: str | None = None
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            mc = _COMP_RE.match(line.strip())
+            if mc and (line.startswith("ENTRY") or line.startswith("%") or raw.startswith("ENTRY")):
+                cur = Computation(mc.group("name"))
+                self.computations[cur.name] = cur
+                if line.strip().startswith("ENTRY") or raw.startswith("ENTRY"):
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                ins = Instr(
+                    mi.group("name"), mi.group("shape"), mi.group("op"), line
+                )
+                cur.instrs.append(ins)
+                cur.shapes[ins.name] = ins.shape
+        if self.entry is None and self.computations:
+            # fall back: largest computation
+            self.entry = max(
+                self.computations, key=lambda k: len(self.computations[k].instrs)
+            )
+        self._memo_flops: dict[str, float] = {}
+        self._memo_bytes: dict[str, float] = {}
+        self._memo_coll: dict[str, dict] = {}
+
+    # -- helpers -------------------------------------------------------------
+
+    def _operand_shape(self, comp: Computation, rest: str, idx: int):
+        names = _OPERAND_RE.findall(rest.split("(", 1)[1] if "(" in rest else rest)
+        if idx >= len(names):
+            return None
+        return comp.shapes.get(names[idx])
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out = ins.out_elems
+        lhs_shape = self._operand_shape(comp, ins.rest, 0)
+        m = _CONTRACT_RE.search(ins.rest)
+        contracted = 1
+        if lhs_shape and m:
+            dims_txt = _SHAPE_RE.search(lhs_shape)
+            if dims_txt and dims_txt.group(2):
+                dims = [int(d) for d in dims_txt.group(2).split(",")]
+                for ci in m.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        contracted *= dims[int(ci)]
+        return 2.0 * out * contracted
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        # depthwise-ish approximation: 2 * output_elems * kernel_spatial
+        rhs_shape = self._operand_shape(comp, ins.rest, 1)
+        k = 1
+        if rhs_shape:
+            m = _SHAPE_RE.search(rhs_shape)
+            if m and m.group(2):
+                dims = [int(d) for d in m.group(2).split(",")]
+                k = max(1, int(__import__("numpy").prod(dims[:-1])))
+        return 2.0 * ins.out_elems * min(k, 10_000)
+
+    def _trip(self, ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.rest)
+        return int(m.group(1)) if m else 1
+
+    def _called(self, ins: Instr) -> list[str]:
+        out = []
+        for rx in (_CALLS_RE, _COND_RE, _BODY_RE):
+            m = rx.search(ins.rest)
+            if m:
+                out.append(m.group(1))
+        return out
+
+    # -- aggregates ------------------------------------------------------------
+
+    def flops(self, comp_name: str | None = None) -> float:
+        name = comp_name or self.entry
+        if name in self._memo_flops:
+            return self._memo_flops[name]
+        comp = self.computations.get(name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        self._memo_flops[name] = 0.0  # cycle guard
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                total += self._dot_flops(comp, ins)
+            elif ins.op == "convolution":
+                total += self._conv_flops(comp, ins)
+            elif ins.op in _ELEMENTWISE:
+                total += ins.out_elems
+            elif ins.op in ("reduce", "reduce-window"):
+                sh = self._operand_shape(comp, ins.rest, 0)
+                total += _shape_elems_bytes(sh)[0] if sh else ins.out_elems
+            elif ins.op == "while":
+                t = self._trip(ins)
+                total += t * sum(self.flops(c) for c in self._called(ins))
+            elif ins.op in ("fusion", "call", "conditional", "map", "async-start"):
+                total += sum(self.flops(c) for c in self._called(ins))
+        self._memo_flops[name] = total
+        return total
+
+    def bytes_accessed(self, comp_name: str | None = None) -> float:
+        """Top-level op traffic; fusion = operands + output only."""
+        name = comp_name or self.entry
+        if name in self._memo_bytes:
+            return self._memo_bytes[name]
+        comp = self.computations.get(name)
+        if comp is None:
+            return 0.0
+        self._memo_bytes[name] = 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.op == "while":
+                t = self._trip(ins)
+                total += t * sum(self.bytes_accessed(c) for c in self._called(ins))
+            elif ins.op in ("call", "conditional"):
+                total += sum(self.bytes_accessed(c) for c in self._called(ins))
+            elif ins.op in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+                continue
+            elif ins.op == "dynamic-update-slice":
+                # in-place update: traffic = 2 x update slice, not the buffer
+                onames = _OPERAND_RE.findall(ins.rest.split("(", 1)[1])
+                upd = (
+                    _shape_elems_bytes(comp.shapes.get(onames[1], ""))[1]
+                    if len(onames) > 1
+                    else 0
+                )
+                total += 2 * upd
+            elif ins.op == "dynamic-slice":
+                total += 2 * ins.out_bytes
+            else:
+                in_place_fusion = False
+                if ins.op == "fusion":
+                    for c in self._called(ins):
+                        callee = self.computations.get(c)
+                        if callee and callee.instrs and callee.instrs[-1].op == "dynamic-update-slice":
+                            root = callee.instrs[-1]
+                            on = _OPERAND_RE.findall(root.rest.split("(", 1)[1])
+                            upd = (
+                                _shape_elems_bytes(callee.shapes.get(on[1], ""))[1]
+                                if len(on) > 1
+                                else 0
+                            )
+                            total += 2 * upd
+                            in_place_fusion = True
+                if not in_place_fusion:
+                    # operands + output (fusion internals excluded by design)
+                    onames = _OPERAND_RE.findall(
+                        ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
+                    )
+                    ob = sum(
+                        _shape_elems_bytes(comp.shapes.get(n, ""))[1] for n in onames
+                    )
+                    total += ob + ins.out_bytes
+        self._memo_bytes[name] = total
+        return total
+
+    def collective_bytes(self, comp_name: str | None = None) -> dict:
+        name = comp_name or self.entry
+        if name in self._memo_coll:
+            return dict(self._memo_coll[name])
+        comp = self.computations.get(name)
+        out = {k: 0.0 for k in _COLLECTIVES}
+        if comp is None:
+            return out
+        self._memo_coll[name] = dict(out)
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                out[base] += ins.out_bytes
+            elif ins.op == "while":
+                t = self._trip(ins)
+                for c in self._called(ins):
+                    sub = self.collective_bytes(c)
+                    for k in _COLLECTIVES:
+                        out[k] += t * sub[k]
+            elif ins.op in ("fusion", "call", "conditional"):
+                for c in self._called(ins):
+                    sub = self.collective_bytes(c)
+                    for k in _COLLECTIVES:
+                        out[k] += sub[k]
+        out["total"] = sum(out[k] for k in _COLLECTIVES)
+        self._memo_coll[name] = dict(out)
+        return out
+
+
+def top_collectives(hlo_text: str, k: int = 12) -> list[dict]:
+    """Largest collective ops (per-device output bytes x trip count) with
+    their source op_name metadata — the §Perf 'profile'."""
+    mod = HloModule(hlo_text)
+    # trip multiplier per computation (entry=1, while bodies *= trips)
+    mult: dict[str, int] = {mod.entry: 1}
+    frontier = [mod.entry]
+    while frontier:
+        name = frontier.pop()
+        comp = mod.computations.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            t = mod._trip(ins) if ins.op == "while" else 1
+            for c in mod._called(ins):
+                m = mult.get(name, 1) * t
+                if mult.get(c, 0) < m:
+                    mult[c] = m
+                    frontier.append(c)
+    out = []
+    meta_re = re.compile(r'op_name="([^"]+)"')
+    for name, comp in mod.computations.items():
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                m = meta_re.search(ins.rest)
+                out.append(
+                    {
+                        "kind": base,
+                        "bytes": ins.out_bytes * mult.get(name, 1),
+                        "per_call_bytes": ins.out_bytes,
+                        "trips": mult.get(name, 1),
+                        "shape": ins.shape[:64],
+                        "source": (m.group(1)[:120] if m else ""),
+                    }
+                )
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:k]
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    coll = mod.collective_bytes()
+    return {
+        "flops": mod.flops(),
+        "bytes": mod.bytes_accessed(),
+        "collectives": coll,
+    }

@@ -1,0 +1,75 @@
+"""Assigned input-shape grid + abstract input construction.
+
+Every (arch x shape) cell lowers exactly one step function:
+  train_4k    -> train_step   (loss + grads + optimizer update)
+  prefill_32k -> prefill_step (full-sequence forward + cache build)
+  decode_32k  -> serve_step   (one new token against a seq_len KV cache)
+  long_500k   -> serve_step   (sub-quadratic archs only; see DESIGN.md §5)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} ({cfg.family}) is full-attention — skipped per assignment"
+        )
+    return True, ""
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    spec = SHAPES[shape_name]
+    i32 = jnp.int32
+    if spec.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((spec.batch, spec.seq), i32),
+            "targets": jax.ShapeDtypeStruct((spec.batch, spec.seq), i32),
+        }
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (spec.batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.act_dtype)
+            )
+        return {"batch": batch}
+    if spec.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((spec.batch, spec.seq), i32)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (spec.batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.act_dtype)
+            )
+        return {"batch": batch}
+    # decode: one new token against a seq-long cache
+    cache = jax.eval_shape(
+        lambda: model.init_cache(cfg, spec.batch, spec.seq, cfg.act_dtype)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((spec.batch, 1), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,1 @@
+from . import attention, layers, model, moe, rglru, schema, ssm, transformer  # noqa

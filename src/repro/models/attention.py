@@ -1,0 +1,319 @@
+"""Attention: GQA/MQA/MHA, MLA (DeepSeek-V2), sliding-window, cross-attn.
+
+Two execution paths:
+* ``_attend_naive`` — materializes (Sq, Sk) scores; used for short
+  sequences and single-token decode.
+* ``_attend_chunked`` — flash-style online-softmax over KV chunks with
+  the query dimension also chunked; memory O(q_chunk * kv_chunk)
+  per program instead of O(S^2).  Pure jnp + lax.scan (TPU-friendly:
+  the inner contraction is an MXU matmul per chunk pair).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from .layers import apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def _apply_mask(s, q_pos, k_pos, causal: bool, window: int):
+    """Mask scores in place via a fused where.
+
+    Deliberately NOT a precomputed additive bias tensor: a separate
+    (Sq, Sk) f32 bias is loop-invariant across layers and XLA's LICM
+    hoists it into the scan carry — a catastrophic (B, Sq, Sk) resident
+    buffer at 32k context.  An inline iota-compare fuses into the
+    softmax and materializes nothing.  s: (B, KV, G, Sq, Sk)."""
+    qp = q_pos[:, None, None, :, None]
+    kp = k_pos[:, None, None, None, :]
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= qp - kp < window
+    return jnp.where(valid, s, NEG_INF)
+
+
+def _softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _attend_naive(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
+    # q: (B, Sq, KV, G, Dh), k/v: (B, Sk, KV, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    s = _apply_mask(s, q_pos, k_pos, causal, window)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return o
+
+
+def _attend_chunked(
+    q, k, v, q_pos, k_pos, *, causal, window, softcap, scale, q_chunk, kv_chunk
+):
+    B, Sq, KV, G, Dh = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]  # may differ from Dh (absorbed MLA: latent values)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qc = q.reshape(B, nq, q_chunk, KV, G, Dh)
+    qp = q_pos.reshape(B, nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, KV, Dh)
+    vc = v.reshape(B, nk, kv_chunk, KV, Dv)
+    kp = k_pos.reshape(B, nk, kv_chunk)
+
+    def q_block(args):
+        qb, qpb = args  # (B, qc, KV, G, Dh), (B, qc)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, kpb = xs  # (B, kc, KV, Dh), (B, kc)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
+            s = _softcap(s, softcap)
+            s = _apply_mask(s, qpb, kpb, causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kc, 1, 0),
+                jnp.moveaxis(vc, 1, 0),
+                jnp.moveaxis(kp, 1, 0),
+            ),
+        )
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(o, 3, 1).astype(q.dtype)  # (B, qc, KV, G, Dh)
+
+    q_block = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable
+    )  # bwd re-runs one q-chunk at a time: O(q_chunk) attention residency
+    outs = jax.lax.map(
+        q_block, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0))
+    )  # (nq, B, qc, KV, G, Dv)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, Dv)
+
+
+def attend(
+    q, k, v, q_pos, k_pos, *, causal=True, window=0, softcap=0.0,
+    q_chunk=512, kv_chunk=1024, chunk_threshold=2048, scale=None,
+):
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq > chunk_threshold and Sq % q_chunk == 0:
+        pad = (-Sk) % kv_chunk
+        if pad:
+            # ragged KV (e.g. whisper's 1500 encoder frames): pad with
+            # kpos = -1 slots, which the mask kills — without this the
+            # cross-attention silently fell back to the O(Sq*Sk) naive
+            # path and dominated whisper's train memory
+            zk = [(0, 0), (0, pad)] + [(0, 0)] * (k.ndim - 2)
+            k = jnp.pad(k, zk)
+            v = jnp.pad(v, zk)
+            k_pos = jnp.pad(k_pos, [(0, 0), (0, pad)], constant_values=-1)
+        return _attend_chunked(
+            q, k, v, q_pos, k_pos, causal=causal, window=window,
+            softcap=softcap, scale=scale, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    return _attend_naive(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        softcap=softcap, scale=scale,
+    )
+
+
+def _attend_decode(qg, ck, cv, kpos, k_new, v_new, q_pos, *, window, softcap, scale):
+    """Single-token decode over a READ-ONLY cache plus the fresh K/V.
+
+    The naive path writes the token into the cache first and attends
+    over the whole buffer — under jit that materializes a second copy
+    of the multi-GiB cache inside the layer scan.  Scoring the cache
+    (pure read) and the new token separately, then softmaxing over the
+    concatenated scores, needs no cache write at all; the caller
+    persists the (L, B, 1, KV, Dh) deltas with one aliased
+    dynamic-update-slice after the scan.
+    """
+    s_c = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck).astype(jnp.float32) * scale
+    s_n = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new).astype(jnp.float32) * scale
+    s_c = _softcap(s_c, softcap)
+    s_n = _softcap(s_n, softcap)
+    valid = (kpos >= 0) & (kpos <= q_pos[:, :1])
+    if window:
+        valid &= q_pos[:, :1] - kpos < window
+    s_c = jnp.where(valid[:, None, None, None, :], s_c, NEG_INF)
+    s = jnp.concatenate([s_c, s_n], axis=-1)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqs,bskd->bqkgd", w[..., :-1].astype(cv.dtype), cv
+    ) + jnp.einsum("bkgqs,bskd->bqkgd", w[..., -1:].astype(v_new.dtype), v_new)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (covers MHA and MQA as kv_heads extremes)
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(
+    p,
+    x,
+    cfg,
+    positions,
+    *,
+    causal=True,
+    window=0,
+    cache=None,
+    cache_slot=None,
+    kv_from=None,
+    is_cross=False,
+    use_rope=True,
+    mrope_positions=None,
+):
+    """x: (B, S, d). Returns (out, new_cache, kv) — kv for prefill collection.
+
+    cache: dict(k, v, kpos) for decode; kv_from: encoder output for
+    cross-attention (no cache write; cache holds precomputed enc K/V).
+    """
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = constrain(q, "batch", None, "heads", "head_dim")
+    if is_cross and cache is not None:  # cross-attn decode: cached enc K/V
+        k, v = cache["k"], cache["v"]
+    elif is_cross:
+        k = jnp.einsum("bsd,dhk->bshk", kv_from, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_from, p["wv"])
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    k = constrain(k, "batch", None, "kv_heads", "head_dim")
+    v = constrain(v, "batch", None, "kv_heads", "head_dim")
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if not (is_cross and cache is not None):
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    kv_source_pos = positions
+    if use_rope and not is_cross:
+        if cfg.rope == "mrope" and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        elif cfg.rope in ("rope", "mrope"):
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and not is_cross:
+        # decode: read-only cache + fresh-token merge; emit the delta
+        qg = q.reshape(B, S, KV, G, Dh)
+        o = _attend_decode(
+            qg, cache["k"], cache["v"], cache["kpos"], k, v, positions,
+            window=window, softcap=cfg.logit_softcap, scale=Dh ** -0.5,
+        )
+        o = o.reshape(B, S, H, Dh)
+        o = constrain(o, "batch", None, "heads", "head_dim")
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return out, None, {"k": k, "v": v}
+
+    if cache is not None:  # cross-attn decode
+        k_pos = cache["kpos"]
+        q_pos = positions
+    else:
+        k_pos = kv_source_pos if not is_cross else (
+            jnp.broadcast_to(jnp.arange(k.shape[1])[None, :], k.shape[:2])
+        )
+        q_pos = positions
+
+    kv = (k, v)
+    qg = q.reshape(B, S, KV, G, Dh)
+    o = attend(
+        qg, k, v, q_pos, k_pos,
+        causal=causal and not is_cross,
+        window=window,
+        softcap=cfg.logit_softcap,
+    )
+    o = o.reshape(B, S, H, Dh)
+    o = constrain(o, "batch", None, "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, None, kv
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV with decode-time absorption
+# ---------------------------------------------------------------------------
+
+
+def mla_attention(p, x, cfg, positions, *, cache=None, cache_slot=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rdim, vdim, lora = (
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    scale = (nope + rdim) ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])  # (B,S,lora+rope)
+    c_kv = rms_norm(ckv_full[..., :lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(
+        ckv_full[..., None, lora:], positions, cfg.rope_theta
+    )[:, :, 0, :]  # shared single-head rope key
+
+    if cache is not None:
+        # decode: score the read-only cached latents + the fresh one;
+        # split einsums (latent + rope) avoid any cache-wide concat/copy
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"])  # (B,1,H,lora)
+        s_c = (
+            jnp.einsum("bshl,btl->bhst", q_lat, cache["c_kv"])
+            + jnp.einsum("bshr,btr->bhst", q_rope, cache["k_rope"])
+        ).astype(jnp.float32) * scale
+        s_n = (
+            jnp.einsum("bshl,btl->bhst", q_lat, c_kv)
+            + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        valid = (cache["kpos"] >= 0) & (cache["kpos"] <= positions[:, :1])
+        s_c = jnp.where(valid[:, None, None, :], s_c, -1e30)
+        w = jax.nn.softmax(jnp.concatenate([s_c, s_n], axis=-1), axis=-1)
+        ctx = jnp.einsum(
+            "bhst,btl->bshl", w[..., :-1].astype(x.dtype), cache["c_kv"]
+        ) + jnp.einsum("bhst,btl->bshl", w[..., -1:].astype(x.dtype), c_kv)
+        o = jnp.einsum("bshl,lhv->bshv", ctx, p["w_uv"])
+        out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+        return out, None, {"c_kv": c_kv, "k_rope": k_rope}
+    k_pos = positions
+
+    # Absorbed MLA == GQA with ONE latent KV head: queries live in
+    # (lora + rope) space, keys are concat(c_kv, k_rope), values are the
+    # latent c_kv itself.  This reuses the generic (chunked) attend path
+    # and is the decode-efficient form (cache = lora + rope per token).
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"])  # (B,S,H,lora)
+    q_all = jnp.concatenate([q_lat, q_rope], axis=-1)[:, :, None, :, :]
+    # (B, S, KV=1, G=H, lora+rdim)
+    q_all = q_all.transpose(0, 1, 2, 3, 4)
+    k_all = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]  # KV=1
+    v_all = c_kv[:, :, None, :]
+    ctx = attend(
+        q_all, k_all, v_all, positions, k_pos, causal=True, scale=scale
+    )[:, :, 0, :, :]  # (B, S, H, lora)
+    o = jnp.einsum("bshl,lhv->bshv", ctx.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, None, (c_kv, k_rope)

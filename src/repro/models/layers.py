@@ -1,0 +1,131 @@
+"""Shared model building blocks (pure functions over param dicts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def rms_norm(x, scale, eps: float = 1e-6, offset: float = 0.0):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 1_000_000.0):
+    """Multimodal RoPE (Qwen2-VL): rotary dims split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions3: (3, B, S) — equal streams for text.
+    sections: per-section half-dim counts, sum == D/2.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, (sections, D)
+    freqs = rope_frequencies(D, theta)  # (half,)
+    # build the per-dim position by section
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,) static
+    pos = positions3[sec_id]  # (half, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, half)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def _act(kind: str, x):
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp(p, x, kind: str):
+    """Gated (swiglu/geglu) or plain (gelu) MLP. x: (B, S, d)."""
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = _act(kind, g) * h
+    else:
+        h = _act(kind, jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    h = constrain(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def embed_tokens(embedding, tokens, scale: bool, d_model: int):
+    x = embedding[tokens]
+    if scale:
+        x = x * jnp.asarray(d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(p, x, tie_embeddings: bool):
+    if tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok_embed"])
+    return jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+
+
+def conv1d_causal(x, w, b=None, cache=None):
+    """Depthwise causal 1D conv. x: (B, S, C); w: (K, C).
+
+    With ``cache`` (B, K-1, C): single-step decode returning new cache.
+    """
+    K = w.shape[0]
+    if cache is not None:
+        # x is (B, 1, C)
+        window = jnp.concatenate([cache, x], axis=1)  # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+        if b is not None:
+            y = y + b
+        return y, window[:, 1:, :]
+    pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # windows: (B, S, K, C) via K static slices (cheap, avoids gather)
+    S = x.shape[1]
+    y = sum(
+        xp[:, i : i + S, :] * w[i][None, None, :] for i in range(K)
+    )
+    if b is not None:
+        y = y + b
+    return y, xp[:, -(K - 1) :, :] if K > 1 else None

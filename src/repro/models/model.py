@@ -1,0 +1,716 @@
+"""Model assembly: parameter schema, forward, loss, prefill, decode.
+
+Public API used by the launcher, tests and benchmarks:
+
+  schema(cfg)                  -> Param pytree (single source of truth)
+  init(cfg, seed)              -> random params (smoke / real training)
+  abstract(cfg)                -> ShapeDtypeStruct params (dry-run)
+  partition_specs(cfg, rules)  -> PartitionSpecs mirroring params
+  loss_fn(params, cfg, batch)  -> (loss, metrics)
+  prefill(params, cfg, batch)  -> (logits_last, cache)
+  decode_step(params, cfg, cache, tokens) -> (logits, cache)
+  init_cache(cfg, batch, ctx)  -> zeroed decode cache (pos = ctx)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from . import schema as S
+from .layers import embed_tokens, unembed
+from .transformer import (
+    apply_unit,
+    layer_kinds,
+    norm,
+    scan_units,
+    split_layers,
+    unit_pattern,
+)
+
+Param = S.Param
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def _norm_schema(cfg, dim=None):
+    d = dim or cfg.d_model
+    if cfg.is_encoder_decoder:  # whisper: LayerNorm
+        return {"scale": Param((d,), ("embed",), "ones"), "bias": Param((d,), ("embed",), "zeros")}
+    return {"scale": Param((d,), ("embed",), "ones" if not cfg.embed_scale else "zeros")}
+
+
+def _attn_schema(cfg):
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": Param((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": Param((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": Param((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": Param((H, Dh, d), ("heads", "head_dim", "embed"), scale=0.02),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = Param((Dh,), (None,), "ones")
+        out["k_norm"] = Param((Dh,), (None,), "ones")
+    return out
+
+
+def _mla_schema(cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rdim, vdim, lora = (
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    return {
+        "wq": Param((d, H, nope + rdim), ("embed", "heads", "qk_dim")),
+        "w_dkv": Param((d, lora + rdim), ("embed", None)),
+        "kv_norm": Param((lora,), (None,), "ones"),
+        "w_uk": Param((lora, H, nope), (None, "heads", "qk_dim")),
+        "w_uv": Param((lora, H, vdim), (None, "heads", "qk_dim")),
+        "wo": Param((H, vdim, d), ("heads", "qk_dim", "embed"), scale=0.02),
+    }
+
+
+def _mlp_schema(cfg, width=None):
+    d, ff = cfg.d_model, width or cfg.d_ff
+    out = {
+        "wi": Param((d, ff), ("embed", "ffn")),
+        "wo": Param((ff, d), ("ffn", "embed")),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        out["wg"] = Param((d, ff), ("embed", "ffn"))
+    return out
+
+
+def _moe_schema(cfg):
+    d, E = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    out = {
+        "router": Param((d, E), ("embed", None), scale=0.02),
+        "wi": Param((E, d, ff), ("experts", "embed", "expert_ffn")),
+        "wo": Param((E, ff, d), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        out["wg"] = Param((E, d, ff), ("experts", "embed", "expert_ffn"))
+    if cfg.n_shared_experts:
+        w = cfg.n_shared_experts * ff
+        out["shared_wi"] = Param((d, w), ("embed", "ffn"))
+        out["shared_wo"] = Param((w, d), ("ffn", "embed"))
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            out["shared_wg"] = Param((d, w), ("embed", "ffn"))
+    return out
+
+
+def _ssm_schema(cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    G, N, K = cfg.ssm_n_groups, cfg.ssm_d_state, cfg.ssm_d_conv
+    H = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * G * N
+    return {
+        "in_proj": Param((d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": Param((K, conv_dim), (None, "ssm_inner"), scale=0.2),
+        "conv_b": Param((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": Param((H,), (None,), "const", scale=1.39),  # A ~ -4
+        "dt_bias": Param((H,), (None,), "const", scale=-4.6),  # dt ~ 0.01
+        "D": Param((H,), (None,), "ones"),
+        "out_norm": Param((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": Param((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _rec_schema(cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_gate": Param((d, w), ("embed", "lru")),
+        "w_rec": Param((d, w), ("embed", "lru")),
+        "conv_w": Param((4, w), (None, "lru"), scale=0.2),
+        "conv_b": Param((w,), ("lru",), "zeros"),
+        # column-parallel gates: replicate-in, shard-out — turns the
+        # per-gate f32 all-reduce into one bf16 all-gather of the input
+        "w_a": Param((w, w), (None, "lru")),
+        "b_a": Param((w,), ("lru",), "zeros"),
+        "w_x": Param((w, w), (None, "lru")),
+        "b_x": Param((w,), ("lru",), "zeros"),
+        "lam": Param((w,), (None,), "const", scale=1.0),
+        "w_out": Param((w, d), ("lru", "embed")),
+    }
+
+
+def _subblock_schema(cfg, kind: str, moe_layer: bool):
+    if kind == "ssm":
+        return {"norm": _norm_schema(cfg), "ssm": _ssm_schema(cfg)}
+    if kind == "rec":
+        return {
+            "norm": _norm_schema(cfg),
+            "rec": _rec_schema(cfg),
+            "mlp_norm": _norm_schema(cfg),
+            "mlp": _mlp_schema(cfg),
+        }
+    if kind == "xattn":
+        return {
+            "norm1": _norm_schema(cfg),
+            "self_attn": _attn_schema(cfg),
+            "norm2": _norm_schema(cfg),
+            "cross_attn": _attn_schema(cfg),
+            "norm3": _norm_schema(cfg),
+            "mlp": _mlp_schema(cfg),
+        }
+    attn = _mla_schema(cfg) if cfg.attn_kind == "mla" else _attn_schema(cfg)
+    out = {"norm": _norm_schema(cfg), "attn": attn, "mlp_norm": _norm_schema(cfg)}
+    if moe_layer:
+        out["moe"] = _moe_schema(cfg)
+    else:
+        out["mlp"] = _mlp_schema(cfg)
+    return out
+
+
+def _unit_schema(cfg, pat, moe_flags):
+    return {
+        f"b{i}": _subblock_schema(cfg, k, moe_flags[i]) for i, k in enumerate(pat)
+    }
+
+
+def _stack(schema_tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: Param((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale, p.dtype),
+        schema_tree,
+        is_leaf=S.is_param,
+    )
+
+
+def moe_flags_for(cfg, pat) -> tuple:
+    return tuple(cfg.is_moe for _ in pat)
+
+
+def schema(cfg) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    pat = unit_pattern(cfg)
+    prefix, n_units, tail = split_layers(cfg)
+    flags = moe_flags_for(cfg, pat)
+
+    out: dict[str, Any] = {
+        "tok_embed": Param((V, d), ("vocab", "embed"), "normal"),
+        "final_norm": _norm_schema(cfg),
+        "layers": _stack(_unit_schema(cfg, pat, flags), n_units),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Param((d, V), ("embed", "vocab"))
+    if cfg.rope == "learned":
+        out["pos_embed"] = Param((cfg.max_seq, d), (None, "embed"), "normal")
+    for i in range(prefix):  # unscanned leading dense layers (dsv2)
+        out[f"prefix_{i}"] = _subblock_schema(cfg, layer_kinds(cfg)[i], False)
+    for i, k in enumerate(tail):  # remainder layers (recurrentgemma 38 % 3)
+        out[f"tail_{i}"] = _subblock_schema(cfg, k, cfg.is_moe)
+    if cfg.is_encoder_decoder:
+        enc_unit = {
+            "b0": {
+                "norm1": _norm_schema(cfg),
+                "self_attn": _attn_schema(cfg),
+                "norm3": _norm_schema(cfg),
+                "mlp": _mlp_schema(cfg),
+            }
+        }
+        out["encoder"] = {
+            "pos_embed": Param((cfg.encoder_seq, d), (None, "embed"), "normal"),
+            "layers": _stack(enc_unit, cfg.encoder_layers),
+            "final_norm": _norm_schema(cfg),
+        }
+    return out
+
+
+def init(cfg, seed: int = 0):
+    return S.init_params(schema(cfg), jax.random.PRNGKey(seed), cfg.param_dtype)
+
+
+def abstract(cfg):
+    return S.abstract_params(schema(cfg), cfg.param_dtype)
+
+
+def partition_specs(cfg, rules):
+    return S.param_specs(schema(cfg), rules)
+
+
+def partition_pspecs(cfg, rules):
+    return S.param_pspecs(schema(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper stub-frontend)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg, frames, remat=True):
+    """frames: (B, enc_seq, d) — precomputed frame embeddings (stub)."""
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, : frames.shape[1], :].astype(frames.dtype)
+    pos = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :], frames.shape[:2]
+    )
+
+    def body(carry, lp):
+        x = carry
+        p = lp["b0"]
+        from .attention import gqa_attention
+        from .layers import mlp as _mlp
+
+        h, _, _ = gqa_attention(
+            p["self_attn"], norm(p["norm1"], x, cfg), cfg, pos,
+            causal=False, use_rope=False,
+        )
+        x = x + h
+        x = x + _mlp(p["mlp"], norm(p["norm3"], x, cfg), cfg.mlp_kind)
+        return x, None
+
+    fn = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if remat
+        else body
+    )
+    x, _ = jax.lax.scan(fn, x, enc["layers"])
+    return norm(enc["final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg, tokens):
+    x = embed_tokens(
+        params["tok_embed"], tokens, cfg.embed_scale, cfg.d_model
+    ).astype(jnp.dtype(cfg.act_dtype))
+    if cfg.rope == "learned":
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = x + params["pos_embed"][pos][None].astype(x.dtype)
+    return x
+
+
+def _apply_stack(params, cfg, x, positions, *, mode, cache=None, enc_out=None,
+                 mrope_positions=None, remat=True, decode_pos=None):
+    """prefix layers -> scanned units -> tail layers."""
+    pat = unit_pattern(cfg)
+    prefix, n_units, tail = split_layers(cfg)
+    flags = moe_flags_for(cfg, pat)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches, collected = {}, {}
+
+    for i in range(prefix):
+        x, nc, col, aux = apply_unit(
+            (layer_kinds(cfg)[i],), {"b0": params[f"prefix_{i}"]}, x, cfg,
+            positions, mode=mode, enc_out=enc_out,
+            cache=None if cache is None else {"b0": cache[f"prefix_{i}"]},
+            mrope_positions=mrope_positions, moe_flags=(False,),
+            decode_pos=decode_pos,
+        )
+        aux_total += aux
+        if nc is not None:
+            caches[f"prefix_{i}"] = nc["b0"]
+        if col is not None:
+            collected[f"prefix_{i}"] = col["b0"]
+
+    x, sc, scol, aux = scan_units(
+        pat, params["layers"], x, cfg, positions, mode=mode,
+        cache=None if cache is None else cache["layers"],
+        enc_out=enc_out, mrope_positions=mrope_positions,
+        moe_flags=flags, remat=remat, decode_pos=decode_pos,
+    )
+    aux_total += aux
+    if sc is not None:
+        caches["layers"] = sc
+    if scol is not None:
+        collected["layers"] = scol
+
+    for i, k in enumerate(tail):
+        x, nc, col, aux = apply_unit(
+            (k,), {"b0": params[f"tail_{i}"]}, x, cfg, positions, mode=mode,
+            cache=None if cache is None else {"b0": cache[f"tail_{i}"]},
+            enc_out=enc_out, mrope_positions=mrope_positions,
+            moe_flags=(cfg.is_moe,), decode_pos=decode_pos,
+        )
+        aux_total += aux
+        if nc is not None:
+            caches[f"tail_{i}"] = nc["b0"]
+        if col is not None:
+            collected[f"tail_{i}"] = col["b0"]
+    return x, caches, collected, aux_total
+
+
+def forward(params, cfg, batch, *, mode="train", remat=True):
+    """batch: dict(tokens (B,S) [, frames, mrope_positions]).
+
+    Returns (logits, collected, aux)."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = _embed_in(params, cfg, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None, :], (B, Sq))
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"], remat=remat)
+
+    x, _, collected, aux = _apply_stack(
+        params, cfg, x, positions, mode=mode, enc_out=enc_out,
+        mrope_positions=mrope_positions, remat=remat,
+    )
+    x = norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg.tie_embeddings)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, collected, aux
+
+
+def _streamed_xent(params, cfg, x, targets, chunk: int = 256):
+    """Chunked softmax cross-entropy over the sequence dim.
+
+    The full (B, S, V) f32 logits tensor is the single largest train
+    buffer (gemma: 256k vocab -> 17 GB/step global).  Computing the
+    unembed + logsumexp per S-chunk under jax.checkpoint keeps only one
+    chunk's logits live in either pass.  Returns (sum_nll, n_tokens)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, d)
+    tc = targets.reshape(B, nc, chunk)
+
+    def one(args):
+        xi, ti = args  # (B, chunk, d), (B, chunk)
+        logits = unembed(params, xi, cfg.tie_embeddings).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(ti, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ti >= 0).astype(jnp.float32)
+        return jnp.sum((logz - tgt) * mask), jnp.sum(mask)
+
+    one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    nll, ntok = jax.lax.map(
+        one, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(tc, 1, 0))
+    )
+    return jnp.sum(nll), jnp.sum(ntok)
+
+
+def loss_fn(params, cfg, batch, *, remat=True, aux_weight=0.01):
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = _embed_in(params, cfg, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None, :], (B, Sq))
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"], remat=remat)
+    x, _, _, aux = _apply_stack(
+        params, cfg, x, positions, mode="train", enc_out=enc_out,
+        mrope_positions=mrope_positions, remat=remat,
+    )
+    x = norm(params["final_norm"], x, cfg)
+    nll, ntok = _streamed_xent(params, cfg, x, batch["targets"])
+    loss = nll / jnp.maximum(ntok, 1.0)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "tokens": ntok}
+
+
+# ---------------------------------------------------------------------------
+# Decode: cache init, prefill, single-token step
+# ---------------------------------------------------------------------------
+
+
+def _subblock_cache(cfg, kind: str, B: int, ctx: int, dtype):
+    """Zeroed cache for one sub-block."""
+    dt = jnp.dtype(dtype)
+    if kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        G, N, K = cfg.ssm_n_groups, cfg.ssm_d_state, cfg.ssm_d_conv
+        H = d_in // cfg.ssm_head_dim
+        conv_dim = d_in + 2 * G * N
+        return {
+            "ssm": {
+                "conv": jnp.zeros((B, K - 1, conv_dim), dt),
+                "state": jnp.zeros((B, H, cfg.ssm_head_dim, N), dt),
+            }
+        }
+    if kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        return {
+            "rec": {
+                "conv": jnp.zeros((B, 3, w), dt),
+                "state": jnp.zeros((B, w), dt),
+            }
+        }
+    if kind == "xattn":
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "self": {
+                "k": jnp.zeros((B, ctx, KV, Dh), dt),
+                "v": jnp.zeros((B, ctx, KV, Dh), dt),
+                "kpos": jnp.full((B, ctx), -1, jnp.int32),
+            },
+            "cross": {
+                "k": jnp.zeros((B, cfg.encoder_seq, KV, Dh), dt),
+                "v": jnp.zeros((B, cfg.encoder_seq, KV, Dh), dt),
+                "kpos": jnp.zeros((B, cfg.encoder_seq), jnp.int32),
+            },
+        }
+    # attn
+    length = min(ctx, cfg.attn_window) if cfg.attn_window else ctx
+    if cfg.attn_kind == "mla":
+        return {
+            "attn": {
+                "c_kv": jnp.zeros((B, length, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((B, length, cfg.qk_rope_dim), dt),
+                "kpos": jnp.full((B, length), -1, jnp.int32),
+            }
+        }
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "attn": {
+            "k": jnp.zeros((B, length, KV, Dh), dt),
+            "v": jnp.zeros((B, length, KV, Dh), dt),
+            "kpos": jnp.full((B, length), -1, jnp.int32),
+        }
+    }
+
+
+def init_cache(cfg, B: int, ctx: int, dtype=None):
+    dt = dtype or cfg.act_dtype
+    pat = unit_pattern(cfg)
+    prefix, n_units, tail = split_layers(cfg)
+    kinds = layer_kinds(cfg)
+
+    def stack_leaf(n):
+        return lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape)
+
+    unit = {f"b{i}": _subblock_cache(cfg, k, B, ctx, dt) for i, k in enumerate(pat)}
+    cache: dict[str, Any] = {
+        "layers": jax.tree_util.tree_map(stack_leaf(n_units), unit),
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+    for i in range(prefix):
+        cache[f"prefix_{i}"] = _subblock_cache(cfg, kinds[i], B, ctx, dt)
+    for i, k in enumerate(tail):
+        cache[f"tail_{i}"] = _subblock_cache(cfg, k, B, ctx, dt)
+    return cache
+
+
+def prefill(params, cfg, batch, *, remat=True, headroom: int = 128):
+    """Full-sequence forward that also fills a decode cache.
+
+    ``headroom`` extra KV slots let decoding continue past the prompt
+    without wrapping onto cached context."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    logits, collected, _ = forward(params, cfg, batch, mode="prefill", remat=remat)
+    cache = init_cache(cfg, B, Sq + headroom, cfg.act_dtype)
+    cache = _fill_cache_from_collected(cfg, cache, collected, batch, params, Sq)
+    cache["pos"] = jnp.asarray(Sq, jnp.int32)
+    return logits[:, -1], cache
+
+
+def _ring_gather(kv, S, length):
+    """Place (B, S, ...) K/V into a length-L ring keyed by p % L.
+
+    Slot j holds the latest position p < S with p % L == j (or is empty
+    when L >= S and j >= S). Returns (cache_kv, kpos)."""
+    if length >= S:
+        padding = [(0, 0), (0, length - S)] + [(0, 0)] * (kv.ndim - 2)
+        out = jnp.pad(kv, padding)
+        idx = jnp.concatenate(
+            [jnp.arange(S, dtype=jnp.int32), jnp.full((length - S,), -1, jnp.int32)]
+        )
+        return out, idx
+    offs = (jnp.arange(length) - S) % length
+    idx = (S - length + offs).astype(jnp.int32)
+    return jnp.take(kv, idx, axis=1), idx
+
+
+def _fill_unit_cache(cfg, kind, cache_b, col_b, S, positions):
+    if kind in ("ssm", "rec"):
+        cache_b[kind]["state"] = col_b[kind]["state"].astype(
+            cache_b[kind]["state"].dtype
+        )
+        cache_b[kind]["conv"] = col_b[kind]["conv"].astype(
+            cache_b[kind]["conv"].dtype
+        )
+        return cache_b
+    key = "self_kv" if kind == "xattn" else "kv"
+    sub = "self" if kind == "xattn" else "attn"
+    if cfg.attn_kind == "mla" and kind == "attn":
+        c_kv, k_rope = col_b["kv"]
+        length = cache_b[sub]["c_kv"].shape[-2]
+        ck, idx = _ring_gather(c_kv, S, length)
+        cr, _ = _ring_gather(k_rope, S, length)
+        cache_b[sub]["c_kv"] = ck
+        cache_b[sub]["k_rope"] = cr
+        cache_b[sub]["kpos"] = jnp.broadcast_to(idx[None], ck.shape[:2]).astype(jnp.int32)
+        return cache_b
+    k, v = col_b[key]
+    length = cache_b[sub]["k"].shape[-3]
+    ck, idx = _ring_gather(k, S, length)
+    cv, _ = _ring_gather(v, S, length)
+    cache_b[sub]["k"] = ck
+    cache_b[sub]["v"] = cv
+    cache_b[sub]["kpos"] = jnp.broadcast_to(idx[None], ck.shape[:2]).astype(jnp.int32)
+    return cache_b
+
+
+def _fill_cache_from_collected(cfg, cache, collected, batch, params, S):
+    pat = unit_pattern(cfg)
+    prefix, n_units, tail = split_layers(cfg)
+    kinds = layer_kinds(cfg)
+    for i in range(prefix):
+        if f"prefix_{i}" in collected:
+            cache[f"prefix_{i}"] = _fill_unit_cache(
+                cfg, kinds[i], cache[f"prefix_{i}"], collected[f"prefix_{i}"], S, None
+            )
+    if "layers" in collected:
+        for i, kind in enumerate(pat):
+            key = f"b{i}"
+            col = collected["layers"][key]  # leaves stacked (n_units, ...)
+            cb = cache["layers"][key]
+            # vmap the fill over the stacked layer axis
+            filled = jax.vmap(
+                lambda c, co: _fill_unit_cache(cfg, kind, c, co, S, None)
+            )({k: v for k, v in cb.items()} if isinstance(cb, dict) else cb, col)
+            cache["layers"][key] = filled
+    for i, k in enumerate(tail):
+        if f"tail_{i}" in collected:
+            cache[f"tail_{i}"] = _fill_unit_cache(
+                cfg, k, cache[f"tail_{i}"], collected[f"tail_{i}"], S, None
+            )
+    if cfg.is_encoder_decoder:
+        # cross K/V from the encoder output, computed once
+        enc_out = _encode(params, cfg, batch["frames"], remat=False)
+        def fill_cross(cb, p_cross):
+            from .attention import gqa_attention  # noqa
+
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wv"])
+            cb["cross"]["k"] = k.astype(cb["cross"]["k"].dtype)
+            cb["cross"]["v"] = v.astype(cb["cross"]["v"].dtype)
+            cb["cross"]["kpos"] = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32)[None], k.shape[:2]
+            )
+            return cb
+
+        cache["layers"]["b0"] = jax.vmap(
+            fill_cross, in_axes=(0, 0)
+        )(cache["layers"]["b0"], params["layers"]["b0"]["cross_attn"])
+    return cache
+
+
+def _write_delta(cfg, kind, sub: dict, delta: dict, pos):
+    """Persist one sub-block's decode delta with aliased in-place
+    updates (leaves may carry a leading stacked-layer dim)."""
+    key = "self" if kind == "xattn" else "attn"
+    tgt = dict(sub[key])
+    if "c_kv" in tgt:  # MLA latent cache
+        ring = tgt["c_kv"].shape[-2]
+        slot = pos % ring
+        lead = tgt["c_kv"].ndim - 3
+        z = (0,) * lead
+        tgt["c_kv"] = jax.lax.dynamic_update_slice(
+            tgt["c_kv"], delta["c_kv"].astype(tgt["c_kv"].dtype), z + (0, slot, 0)
+        )
+        tgt["k_rope"] = jax.lax.dynamic_update_slice(
+            tgt["k_rope"], delta["k_rope"].astype(tgt["k_rope"].dtype), z + (0, slot, 0)
+        )
+    else:
+        ring = tgt["k"].shape[-3]
+        slot = pos % ring
+        lead = tgt["k"].ndim - 4
+        z = (0,) * lead
+        tgt["k"] = jax.lax.dynamic_update_slice(
+            tgt["k"], delta["k"].astype(tgt["k"].dtype), z + (0, slot, 0, 0)
+        )
+        tgt["v"] = jax.lax.dynamic_update_slice(
+            tgt["v"], delta["v"].astype(tgt["v"].dtype), z + (0, slot, 0, 0)
+        )
+    kp = tgt["kpos"]
+    upd = jnp.full(kp.shape[:-1] + (1,), pos, jnp.int32)
+    tgt["kpos"] = jax.lax.dynamic_update_slice(
+        kp, upd, (0,) * (kp.ndim - 1) + (slot,)
+    )
+    out = dict(sub)
+    out[key] = tgt
+    return out
+
+
+def decode_step(params, cfg, cache, tokens, *, mrope_positions=None):
+    """tokens: (B, 1). Returns (logits (B, V), new_cache).
+
+    Attention layers never write the cache inside the layer scan (see
+    attention._attend_decode); their per-layer K/V deltas come back as
+    scan outputs and are committed here with one aliased
+    dynamic-update-slice per leaf — the donated cache buffer is updated
+    in place, no second copy exists."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = embed_tokens(params["tok_embed"], tokens, cfg.embed_scale, cfg.d_model)
+    x = x.astype(jnp.dtype(cfg.act_dtype))
+    if cfg.rope == "learned":
+        x = x + params["pos_embed"][jnp.minimum(pos, cfg.max_seq - 1)][None, None].astype(x.dtype)
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None], (3, B, 1))
+
+    x, caches, collected, _ = _apply_stack(
+        params, cfg, x, positions, mode="decode",
+        cache=cache, enc_out=None, mrope_positions=mrope_positions,
+        remat=False, decode_pos=pos,
+    )
+    x = norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg.tie_embeddings)[:, 0]
+
+    pat = unit_pattern(cfg)
+    prefix, n_units, tail = split_layers(cfg)
+    kinds = layer_kinds(cfg)
+    new_cache = {k: v for k, v in cache.items()}
+    # recurrent/ssm states come back via the cache channel
+    for grp, sub in caches.items():
+        if grp == "layers":
+            merged = dict(new_cache["layers"])
+            merged.update(sub)
+            new_cache["layers"] = merged
+        else:
+            new_cache[grp] = sub
+    # attention K/V deltas commit here
+    if collected:
+        for grp, sub in collected.items():
+            if grp == "layers":
+                merged = dict(new_cache["layers"])
+                for i, kind in enumerate(pat):
+                    key = f"b{i}"
+                    if key in sub and "delta" in sub[key]:
+                        merged[key] = _write_delta(
+                            cfg, kind, new_cache["layers"][key],
+                            sub[key]["delta"], pos,
+                        )
+                new_cache["layers"] = merged
+            else:
+                idx = int(grp.split("_")[1])
+                kind = kinds[idx] if grp.startswith("prefix") else (
+                    tail[idx] if grp.startswith("tail") else "attn"
+                )
+                if "delta" in sub:
+                    new_cache[grp] = _write_delta(
+                        cfg, kind, new_cache[grp], sub["delta"], pos
+                    )
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,71 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU).
+
+Real-Gated Linear Recurrent Unit [arXiv:2402.19427]:
+    r_t = sigmoid(W_a x_t + b_a)         (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)         (input gate)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A diagonal linear recurrence — prefill uses jax.lax.associative_scan
+(log-depth, TPU-native), decode is a one-step update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from .layers import conv1d_causal
+
+_C = 8.0
+
+
+def _rg_lru(p, x, h0=None):
+    """x: (B, S, W). Returns (y, h_last)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wk->bsk", x, p["w_a"]).astype(jnp.float32) + p["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wk->bsk", x, p["w_x"]).astype(jnp.float32) + p["b_x"]
+    )
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+
+    if x.shape[1] == 1 and h0 is not None:  # decode step
+        h = a[:, 0] * h0.astype(jnp.float32) + gated[:, 0]
+        return h[:, None].astype(x.dtype), h.astype(x.dtype)
+
+    def comb(u, v):
+        ua, uh = u
+        va, vh = v
+        return ua * va, uh * va + vh
+
+    a_sc, h_sc = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    if h0 is not None:
+        h_sc = h_sc + a_sc * h0[:, None].astype(jnp.float32)
+    return h_sc.astype(x.dtype), h_sc[:, -1].astype(x.dtype)
+
+
+def recurrent_block(p, x, cfg, *, cache=None):
+    """Griffin recurrent block: (gelu branch) * (conv -> RG-LRU branch)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate"]), approximate=True
+    )
+    rec = jnp.einsum("bsd,dw->bsw", x, p["w_rec"])
+    rec = constrain(rec, "batch", None, "lru")
+
+    conv_cache = cache["conv"] if cache is not None else None
+    rec, new_conv = conv1d_causal(rec, p["conv_w"], p["conv_b"], cache=conv_cache)
+
+    h0 = cache["state"] if cache is not None else None
+    rec, h_last = _rg_lru(p, rec, h0)
+
+    y = jnp.einsum("bsw,wd->bsd", gate * rec, p["w_out"])
+    new_cache = (
+        {"conv": new_conv, "state": h_last} if cache is not None else None
+    )
+    return y, new_cache, {"state": h_last, "conv": new_conv}

@@ -1,0 +1,80 @@
+"""Schema-driven parameters: one source of truth for shapes, sharding
+logical axes, and initializers.
+
+``schema(cfg)`` (in model.py) returns a pytree of :class:`Param`
+leaves; from it we derive random init (smoke tests / real training),
+abstract ShapeDtypeStructs (dry-run — no allocation), and
+PartitionSpecs (in_shardings), guaranteed consistent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Param(NamedTuple):
+    shape: tuple
+    axes: tuple  # logical axis names (same rank as shape)
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | const
+    scale: Optional[float] = None
+    dtype: Optional[str] = None  # override cfg.param_dtype
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _leaf_dtype(p: Param, default: str):
+    return jnp.dtype(p.dtype or default)
+
+
+def init_params(schema, rng_key, default_dtype: str):
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=is_param)
+    keys = jax.random.split(rng_key, len(leaves))
+
+    def mk(p: Param, k):
+        dt = _leaf_dtype(p, default_dtype)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        if p.init == "const":
+            return jnp.full(p.shape, p.scale, dt)
+        if p.init == "normal":
+            return (jax.random.normal(k, p.shape) * (p.scale or 0.02)).astype(dt)
+        # fan_in: normal with 1/sqrt(fan_in); fan_in = product of all but
+        # the last two axes... use first axis group heuristics: treat the
+        # leading "input" dims as fan-in (all dims except the trailing
+        # output block is ambiguous for einsum weights; scale by total
+        # input size = prod(shape) / prod(last dim block) — we use
+        # shape[0] * middle dims conservatively)
+        fan_in = p.shape[0] if len(p.shape) >= 1 else 1
+        s = p.scale if p.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, p.shape) * s).astype(dt)
+
+    return treedef.unflatten([mk(p, k) for p, k in zip(leaves, keys)])
+
+
+def abstract_params(schema, default_dtype: str):
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, _leaf_dtype(p, default_dtype)),
+        schema,
+        is_leaf=is_param,
+    )
+
+
+def param_specs(schema, rules):
+    """NamedShardings for every parameter (shape-aware fallback)."""
+    return jax.tree_util.tree_map(
+        lambda p: rules.sharding(p.axes, p.shape), schema, is_leaf=is_param
+    )
+
+
+def param_pspecs(schema, rules):
+    return jax.tree_util.tree_map(
+        lambda p: rules.spec(p.axes, p.shape), schema, is_leaf=is_param
+    )

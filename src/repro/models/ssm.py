@@ -1,0 +1,136 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Chunked SSD algorithm [Dao & Gu, arXiv:2405.21060]: the sequence is
+split into Q-length chunks; intra-chunk terms are dense (Q x Q) masked
+matmuls (MXU-friendly — the whole point of SSD on TPU), inter-chunk
+state is a per-chunk associative scan over (decay, state) pairs.
+
+Decode path carries (conv window, ssm state) and is O(1) per token —
+this is what makes the long_500k cell tractable for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from .layers import conv1d_causal, rms_norm
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """xh: (B, S, H, P); dt: (B, S, H); A: (H,) negative;
+    Bm/Cm: (B, S, G, N). Returns (y, final_state (B, H, P, N))."""
+    B_, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hper = H // G
+    nc = S // chunk
+
+    xc = xh.reshape(B_, nc, chunk, H, P)
+    dtc = dt.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, G, N)
+    Cc = Cm.reshape(B_, nc, chunk, G, N)
+
+    dA = dtc * A  # (B, nc, Q, H), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # intra-chunk: scores[b,c,h,i,j] = C_i . B_j * exp(cum_i - cum_j) * dt_j
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
+    CB = jnp.repeat(CB, hper, axis=2)  # (B,nc,H,Q,Q)
+    diff = (
+        cum.transpose(0, 1, 3, 2)[..., :, None] - cum.transpose(0, 1, 3, 2)[..., None, :]
+    )  # (B,nc,H,Q,Q); <= 0 on the causal (lower) triangle since cum is
+    # non-increasing — clamp so the masked upper triangle cannot
+    # overflow exp and poison gradients through the where.
+    decay = jnp.exp(jnp.minimum(diff, 0.0))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.where(mask, CB * decay, 0.0) * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(xh.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    w = (decay_to_end * dtc).astype(xh.dtype)
+    Bh = jnp.repeat(Bc, hper, axis=3).reshape(B_, nc, chunk, H, N) if G != H else Bc
+    states = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bh.astype(xh.dtype), xc, w)
+
+    # inter-chunk scan: H_c = exp(sum dA_c) * H_{c-1} + S_c
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (B, nc, H)
+
+    def scan_fn(a, b):
+        a_d, a_s = a
+        b_d, b_s = b
+        return a_d * b_d, a_s * b_d[..., None, None].astype(a_s.dtype) + b_s
+
+    d_sc, s_sc = jax.lax.associative_scan(
+        scan_fn, (chunk_decay, states.astype(jnp.float32)), axis=1
+    )
+    # H_{c-1} entering chunk c
+    prev = jnp.concatenate(
+        [jnp.zeros_like(s_sc[:, :1]), s_sc[:, :-1]], axis=1
+    )  # (B,nc,H,P,N)
+
+    # inter contribution: y_j += exp(cum_j) C_j . H_prev
+    Ch = jnp.repeat(Cc, hper, axis=3).reshape(B_, nc, chunk, H, N) if G != H else Cc
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp", Ch.astype(jnp.float32) * jnp.exp(cum)[..., None], prev
+    )
+    y = y_intra + y_inter.astype(xh.dtype)
+    final_state = s_sc[:, -1].astype(xh.dtype)  # (B,H,P,N)
+    return y.reshape(B_, S, H, P), final_state
+
+
+def ssm_block(p, x, cfg, *, cache=None):
+    """Mamba-2 mixer. x: (B, S, d). cache = dict(conv, state) for decode."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    G, N = cfg.ssm_n_groups, cfg.ssm_d_state
+    P = cfg.ssm_head_dim
+    H = d_in // P
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    xBC = constrain(xBC, "batch", None, "ssm_inner")
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xBC, new_conv = conv1d_causal(xBC, p["conv_w"], p["conv_b"], cache=conv_cache)
+    xBC = jax.nn.silu(xBC)
+
+    xh = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_in + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # zero-pad to a chunk multiple; dt=0 on padding keeps the
+            # recurrence inert (decay 1, update 0) so states are exact
+            zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            xh_p, Bm_p, Cm_p = zf(xh), zf(Bm), zf(Cm)
+            dt_p = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+            y, final_state = _ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, chunk)
+            y = y[:, :S]
+        else:
+            y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+        new_state = final_state
+    else:
+        # O(1) decode: h = exp(dt A) h + dt B (x) x ; y = C . h
+        h0 = cache["state"]  # (B, H, P, N)
+        dt1 = dt[:, 0]  # (B, H)
+        dA = jnp.exp(dt1 * A)  # (B, H)
+        Bh = jnp.repeat(Bm[:, 0], H // G, axis=1) if G != H else Bm[:, 0]
+        upd = jnp.einsum("bhn,bhp,bh->bhpn", Bh.astype(jnp.float32), xh[:, 0].astype(jnp.float32), dt1)
+        h1 = h0.astype(jnp.float32) * dA[..., None, None] + upd
+        Ch = jnp.repeat(Cm[:, 0], H // G, axis=1) if G != H else Cm[:, 0]
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h1)[:, None]
+        y = y.reshape(B, 1, H, P).astype(x.dtype)
+        new_state = h1.astype(x.dtype)
+
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    new_cache = {"conv": new_conv, "state": new_state} if cache is not None else None
+    return out, new_cache, {"state": new_state, "conv": new_conv}

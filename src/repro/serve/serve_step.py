@@ -1,0 +1,63 @@
+"""Serving steps: prefill + single-token decode, mesh-shardable."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.models import model
+
+
+def cache_pspecs(cfg, rules, cache_tree):
+    """PartitionSpecs for a decode cache: batch over DP, kv heads or
+    head_dim over TP; recurrent states batch-sharded."""
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+
+        def tail(axes):
+            return rules.spec(
+                (None,) * (nd - len(axes)) + axes, tuple(leaf.shape)
+            )
+
+        if name in ("k", "v"):
+            return tail(("batch", None, "kv_heads", "head_dim"))
+        if name == "c_kv" or name == "k_rope":
+            return tail(("batch", None, None))
+        if name == "kpos":
+            return tail(("batch", None))
+        if name == "conv":
+            return tail(("batch", None, None))
+        if name == "state":
+            return tail(("batch",) + (None,) * (min(nd, 4) - 1))
+        if name == "pos":
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, tokens):
+        with_rules_logits, new_cache = model.decode_step(params, cfg, cache, tokens)
+        return with_rules_logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return model.prefill(params, cfg, batch, remat=True, headroom=0)
+
+    return prefill_step
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(logits, key, temperature: float = 0.8):
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

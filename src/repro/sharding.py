@@ -1,0 +1,173 @@
+"""Logical-axis sharding: one place that decides how tensors map to the mesh.
+
+Every tensor in the model is annotated with *logical* axis names
+("batch", "seq", "heads", ...).  A :class:`ShardingRules` object maps
+logical names to mesh axes, with per-architecture fallbacks (e.g. an
+8-expert MoE cannot shard experts over a 16-way model axis, so experts
+fall back to replicated and the per-expert ffn dim takes the model
+axis).  ``constrain`` is a no-op outside an active rules context, so
+the same model code runs single-device (smoke tests) and on the
+production mesh (dry-run) unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    mapping: dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def for_config(cls, mesh: Mesh, cfg=None, *, seq_shard: bool = True,
+                   decode: bool = False) -> "ShardingRules":
+        """Default DP/FSDP + TP(+SP) rules for the production mesh.
+
+        data-parallel axes ("pod","data") shard batch and the FSDP
+        (scan-over-layers) param dim; "model" shards heads / ffn /
+        vocab (Megatron TP) and the residual-stream sequence dim
+        between blocks (sequence parallelism).
+        """
+        names = mesh.axis_names
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        tp = "model" if "model" in names else None
+        tp_size = _axis_size(mesh, tp)
+        dp_size = _axis_size(mesh, dp)
+
+        def fits(dim: int, over=tp, size=None) -> bool:
+            n = size if size is not None else _axis_size(mesh, over)
+            return over is not None and dim > 0 and dim % n == 0
+
+        m = {
+            # ZeRO/FSDP: params' d_model dim shards over the DP axes; on
+            # activations "embed" dedups to None because "batch" already
+            # consumed the DP axes (ShardingRules.spec drops reused axes).
+            "batch": dp,
+            "seq": tp if seq_shard else None,  # SP between blocks
+            "kv_seq": None,
+            "embed": None,
+            "heads": tp,
+            "kv_heads": None,  # set per-config below
+            "head_dim": None,
+            "qk_dim": None,
+            "ffn": tp,
+            "vocab": tp,
+            "layers": None,
+            "experts": None,
+            "expert_ffn": tp,
+            "lru": tp,
+            "ssm_inner": tp,
+            "state": None,
+            "conv": None,
+        }
+        if cfg is not None:
+            if fits(cfg.d_model, dp, dp_size):
+                m["embed"] = dp
+            if not fits(cfg.n_heads):
+                m["heads"] = None
+            if not fits(cfg.vocab_size):
+                m["vocab"] = None
+            if cfg.d_ff and not fits(cfg.d_ff):
+                m["ffn"] = None
+            if cfg.n_kv_heads and fits(cfg.n_kv_heads):
+                m["kv_heads"] = tp
+            elif decode and cfg.n_kv_heads and fits(cfg.head_dim):
+                # decode with few KV heads: shard the KV cache's head_dim
+                # (the scores contraction all-reduces); queries follow so
+                # q/k layouts stay consistent
+                m["head_dim"] = tp
+                m["heads"] = None
+            # train with kv < tp: KV stays replicated (q sharded by heads;
+            # GSPMD splits k locally during the grouped contraction)
+            if cfg.n_experts:
+                if fits(cfg.n_experts):
+                    m["experts"] = tp  # true expert parallelism
+                    m["expert_ffn"] = None
+                else:
+                    m["experts"] = None  # replicate experts, TP the ffn dim
+                    m["expert_ffn"] = tp if fits(cfg.moe_d_ff or cfg.d_ff) else None
+            if cfg.attn_kind == "mla":
+                m["kv_heads"] = None
+                m["head_dim"] = None
+            if cfg.lru_width and not fits(cfg.lru_width):
+                m["lru"] = None
+        return cls(mesh=mesh, mapping=m)
+
+    def spec(self, axes: tuple, shape: tuple = None) -> PartitionSpec:
+        """PartitionSpec for logical axes; with ``shape``, any mapping
+        whose mesh-axis product does not divide the dim falls back to
+        replicated (jit in_shardings demand exact divisibility)."""
+        parts, used = [], set()
+        for i, a in enumerate(axes):
+            if a is None:
+                parts.append(None)
+                continue
+            mapped = self.mapping.get(a)
+            if mapped is None:
+                parts.append(None)
+                continue
+            tup = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            tup = tuple(x for x in tup if x not in used)
+            if shape is not None and tup:
+                n = 1
+                for x in tup:
+                    n *= self.mesh.shape[x]
+                if n == 0 or shape[i] % n != 0:
+                    parts.append(None)
+                    continue
+            used.update(tup)
+            parts.append(tup if len(tup) > 1 else (tup[0] if tup else None))
+        return PartitionSpec(*parts)
+
+    def sharding(self, axes: tuple, shape: tuple = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes (no-op without rules).
+
+    Shape-aware: a logical mapping that does not divide the concrete
+    dim is dropped rather than padded."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"rank mismatch: {axes} vs {x.shape}")
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(tuple(axes), tuple(x.shape))
+    )

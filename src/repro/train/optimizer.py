@@ -1,0 +1,122 @@
+"""AdamW with memory-dtype control, cosine schedule, grad clipping, and
+optional int8 error-feedback gradient compression.
+
+Moments can be stored in bfloat16 (``opt_dtype="bfloat16"``), which is
+what lets the 314B MoE fit the 16 GiB/chip HBM budget on the single-pod
+mesh (EXPERIMENTS.md §Dry-run); updates are always computed in f32.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    opt_dtype: str = "float32"  # moment storage dtype
+    compress_grads: bool = False  # int8 + error feedback on the DP reduce
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+    ef_error: Any = None  # error-feedback residual (compression)
+
+
+def init(params, ocfg: OptConfig) -> OptState:
+    dt = jnp.dtype(ocfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params)
+    ef = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        if ocfg.compress_grads
+        else None
+    )
+    return OptState(mu=mu, nu=nu, step=jnp.zeros((), jnp.int32), ef_error=ef)
+
+
+def schedule(ocfg: OptConfig, step):
+    warm = jnp.minimum(step / max(ocfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - ocfg.warmup_steps) / max(ocfg.total_steps - ocfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(math.pi * t))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def compress_int8(g, error):
+    """Symmetric per-tensor int8 quantize-dequantize with error feedback.
+
+    Models the compressed DP all-reduce: what crosses the network is the
+    int8 payload + one scale; the residual is fed back next step, so the
+    bias vanishes asymptotically (EF-SGD).  Returns (decompressed, new_error).
+    """
+    g32 = g.astype(jnp.float32) + error.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), (g32 - deq).astype(jnp.bfloat16)
+
+
+def apply(params, grads, opt: OptState, ocfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    step = opt.step + 1
+
+    new_ef = opt.ef_error
+    if ocfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, opt.ef_error)
+        grads = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(ocfg, step)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt.mu, opt.nu)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return (
+        new_params,
+        OptState(mu=new_mu, nu=new_nu, step=step, ef_error=new_ef),
+        {"grad_norm": gnorm, "lr": lr},
+    )

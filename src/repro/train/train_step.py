@@ -1,0 +1,127 @@
+"""Distributed train step: microbatched grad accumulation + AdamW.
+
+The step function is built once per (cfg, mesh) and jitted with
+explicit in/out shardings derived from the logical-axis rules; inside,
+``sharding.constrain`` annotations steer GSPMD (TP/SP/EP), and the
+ZeRO-style param sharding (embed dim over the DP axes) makes the
+backward pass emit reduce-scatters instead of all-reduces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.models import model
+from . import optimizer as optim
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: optim.OptState
+
+
+def init_state(cfg, ocfg: optim.OptConfig, seed: int = 0) -> TrainState:
+    params = model.init(cfg, seed)
+    return TrainState(params=params, opt=optim.init(params, ocfg))
+
+
+def abstract_state(cfg, ocfg: optim.OptConfig) -> TrainState:
+    params = model.abstract(cfg)
+    opt = jax.eval_shape(lambda p: optim.init(p, ocfg), params)
+    return TrainState(params=params, opt=opt)
+
+
+def state_pspecs(cfg, ocfg: optim.OptConfig, rules) -> TrainState:
+    pspec = model.partition_pspecs(cfg, rules)
+    opt = optim.OptState(
+        mu=pspec,
+        nu=pspec,
+        step=P(),
+        ef_error=pspec if ocfg.compress_grads else None,
+    )
+    return TrainState(params=pspec, opt=opt)
+
+
+def batch_pspecs(cfg, rules, batch_tree):
+    def spec(path, leaf):
+        if leaf.ndim == 2:
+            return rules.spec(("batch", None))
+        return rules.spec(("batch", None, None))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def make_train_step(cfg, ocfg: optim.OptConfig, *, microbatches: int = 1, remat=True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                gacc, lacc = carry
+                (loss, _), g = jax.value_and_grad(
+                    lambda p: model.loss_fn(p, cfg, mb, remat=remat), has_aux=True
+                )(params)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches, gacc, g
+                )
+                return (gacc, lacc + loss / microbatches), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, params
+            )
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+            )(params)
+
+        new_params, new_opt, om = optim.apply(params, grads, state.opt, ocfg)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, ocfg, mesh, *, microbatches=1, remat=True, seq_shard=True,
+                   donate=True):
+    """jit with explicit in/out shardings for the production mesh."""
+    rules = shd.ShardingRules.for_config(mesh, cfg, seq_shard=seq_shard)
+    sspec = state_pspecs(cfg, ocfg, rules)
+    state_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), sspec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    step = make_train_step(cfg, ocfg, microbatches=microbatches, remat=remat)
+
+    def wrapped(state, batch):
+        with shd.use_rules(rules):
+            return step(state, batch)
+
+    batch_spec = {"tokens": rules.spec(("batch", None)), "targets": rules.spec(("batch", None))}
+    if cfg.is_encoder_decoder:
+        batch_spec["frames"] = rules.spec(("batch", None, None))
+    batch_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), batch_spec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.jit(
+        wrapped,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    ), rules

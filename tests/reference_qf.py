@@ -1,0 +1,98 @@
+"""Paper-faithful item-at-a-time quotient filter (pure Python).
+
+Implements §3 of the paper directly — the MAY-CONTAIN walk of Fig. 3
+and the shifting insert — on the non-wrapping layout used by the JAX
+port (runs kept sorted by remainder, which the paper's in-order
+traversal property implies).  Used as an *independent structural
+oracle*: the bulk-parallel build must reproduce these slot planes
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+
+class PaperQF:
+    def __init__(self, q: int, r: int, slack: int = 1024):
+        self.q, self.r = q, r
+        self.m = 1 << q
+        self.total = self.m + slack
+        t = self.total
+        self.occ = [False] * t
+        self.shf = [False] * t
+        self.con = [False] * t
+        self.rem = [0] * t
+        self.n = 0
+
+    # -- decoding helpers ---------------------------------------------------
+
+    def _free(self, i: int) -> bool:
+        """Slot i holds no remainder (occupied implies in-cluster)."""
+        return not (self.occ[i] or self.shf[i])
+
+    def _run_start(self, fq: int) -> int:
+        """The walk of Fig. 3: anchor at the cluster start, skip the runs
+        of earlier occupied buckets."""
+        b = fq
+        while self.shf[b]:
+            b -= 1
+        s = b
+        while b != fq:
+            # skip all elements in the current run
+            s += 1
+            while self.con[s]:
+                s += 1
+            # find the next occupied bucket
+            b += 1
+            while not self.occ[b]:
+                b += 1
+        return s
+
+    def contains(self, fq: int, fr: int) -> bool:
+        if not self.occ[fq]:
+            return False
+        s = self._run_start(fq)
+        while True:
+            if self.rem[s] == fr:
+                return True
+            s += 1
+            if not self.con[s]:
+                return False
+
+    # -- the paper's shifting insert -----------------------------------------
+
+    def insert(self, fq: int, fr: int) -> None:
+        self.n += 1
+        if self._free(fq):
+            self.occ[fq] = True
+            self.rem[fq] = fr
+            return
+        was_occ = self.occ[fq]
+        self.occ[fq] = True
+        s = self._run_start(fq)
+        run_head = s
+        if was_occ:
+            # advance to the sorted position within the existing run
+            while self.rem[s] < fr:
+                nxt = s + 1
+                if not self.con[nxt]:
+                    s = nxt  # one past the run's end
+                    break
+                s = nxt
+        at_head = s == run_head
+        displaced_head = was_occ and at_head
+        # shift everything right from s to the first free slot
+        e = s
+        while not self._free(e):
+            e += 1
+        for i in range(e, s, -1):
+            self.rem[i] = self.rem[i - 1]
+            self.con[i] = self.con[i - 1]
+            self.shf[i] = True
+        self.rem[s] = fr
+        self.con[s] = was_occ and not at_head
+        self.shf[s] = s != fq
+        if displaced_head:
+            self.con[s + 1] = True
+
+    def planes(self):
+        return list(self.rem), list(self.occ), list(self.shf), list(self.con)

@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, shape + finiteness checks, decode == full-forward equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, make_smoke
+from repro.models import model
+
+
+def _batch(cfg, rng, B=2, S=24, with_targets=True):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    }
+    if with_targets:
+        batch["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+        )
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name):
+    cfg = make_smoke(get_config(name))
+    rng = np.random.default_rng(0)
+    params = model.init(cfg, 0)
+    batch = _batch(cfg, rng)
+    logits, _, aux = model.forward(params, cfg, batch, remat=False)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_one_train_step(name):
+    """One SGD step must produce finite loss + grads and change params."""
+    cfg = make_smoke(get_config(name))
+    rng = np.random.default_rng(1)
+    params = model.init(cfg, 0)
+    batch = _batch(cfg, rng)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, cfg, batch, remat=True), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss)), name
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    new = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    loss2, _ = model.loss_fn(new, cfg, batch, remat=False)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_full_forward(name):
+    cfg = make_smoke(get_config(name))
+    if cfg.is_moe:
+        cfg = cfg.replace(capacity_factor=64.0)  # no token drops -> exact
+    rng = np.random.default_rng(2)
+    params = model.init(cfg, 0)
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    batch = _batch(cfg, rng, B=B, S=S, with_targets=False)
+    batch["tokens"] = toks[:, :S]
+    full = dict(batch, tokens=toks)
+    logits_full, _, _ = model.forward(params, cfg, full, mode="train", remat=False)
+    last, cache = model.prefill(params, cfg, batch, remat=False)
+    scale = float(jnp.max(jnp.abs(logits_full)))
+    assert float(jnp.max(jnp.abs(last - logits_full[:, S - 1]))) / scale < 2e-3
+    step, cache = model.decode_step(params, cfg, cache, toks[:, S : S + 1])
+    assert float(jnp.max(jnp.abs(step - logits_full[:, S]))) / scale < 2e-3
+    assert int(cache["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_multi_step_decode_stable(name):
+    cfg = make_smoke(get_config(name))
+    rng = np.random.default_rng(3)
+    params = model.init(cfg, 0)
+    batch = _batch(cfg, rng, with_targets=False)
+    _, cache = model.prefill(params, cfg, batch, remat=False)
+    tok = batch["tokens"][:, -1:]
+    for _ in range(4):
+        logits, cache = model.decode_step(params, cfg, cache, tok)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+def test_param_count_vs_schema():
+    """Analytic param count must be within 1.5% of the real tree (big cfgs)."""
+    for name in ARCHS:
+        cfg = get_config(name)
+        sch = model.schema(cfg)
+        import repro.models.schema as S
+
+        total = sum(
+            int(np.prod(p.shape))
+            for p in jax.tree.leaves(sch, is_leaf=S.is_param)
+        )
+        analytic = cfg.param_count()
+        rel = abs(total - analytic) / total
+        assert rel < 0.015, f"{name}: schema {total:,} vs analytic {analytic:,}"
+
+
+def test_full_config_headline_params():
+    """Sanity: full configs land near their nameplate sizes."""
+    import repro.models.schema as S
+
+    expect = {
+        "grok-1-314b": (290e9, 340e9),
+        "deepseek-v2-lite-16b": (14e9, 18e9),
+        "qwen3-8b": (7e9, 9.5e9),
+        "gemma-7b": (7.5e9, 9.5e9),
+        "deepseek-7b": (6e9, 8e9),
+        "starcoder2-15b": (14e9, 17e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "recurrentgemma-9b": (8e9, 11e9),
+        "qwen2-vl-7b": (6.5e9, 8.5e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for name, (lo, hi) in expect.items():
+        cfg = get_config(name)
+        sch = model.schema(cfg)
+        total = sum(
+            int(np.prod(p.shape))
+            for p in jax.tree.leaves(sch, is_leaf=S.is_param)
+        )
+        assert lo <= total <= hi, f"{name}: {total/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

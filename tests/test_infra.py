@@ -1,0 +1,207 @@
+"""Data pipeline, checkpointing, fault-tolerance, optimizer tests."""
+
+import os
+import pickle
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import DedupPipeline, PipelineConfig
+from repro.train import optimizer as optim
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (
+    ClusterMonitor,
+    FTConfig,
+    HostState,
+    TrainSupervisor,
+    plan_rescale,
+)
+
+
+class TestPipeline:
+    def test_dedup_drops_duplicates(self):
+        pipe = DedupPipeline(
+            PipelineConfig(seq_len=128, batch_size=2, duplicate_fraction=0.5, seed=1)
+        )
+        batches = list(pipe.batches(3, docs_per_step=128))
+        assert len(batches) == 3
+        assert pipe.state.docs_dropped > 0
+        # with a 0.5 dup fraction, drop rate should be near 50%
+        rate = pipe.state.docs_dropped / pipe.state.docs_seen
+        assert 0.3 < rate < 0.7
+        for b in batches:
+            assert b["tokens"].shape == (2, 128)
+            # targets are next-token shifted
+            flat_t = np.asarray(b["tokens"]).ravel()
+            flat_y = np.asarray(b["targets"]).ravel()
+            np.testing.assert_array_equal(flat_t[1:], flat_y[:-1])
+
+    def test_zero_duplicates_passthrough(self):
+        pipe = DedupPipeline(
+            PipelineConfig(seq_len=64, batch_size=2, duplicate_fraction=0.0, seed=2)
+        )
+        list(pipe.batches(2, docs_per_step=64))
+        # only false positives (~n * 2^-p) may drop; at this scale: none
+        assert pipe.state.docs_dropped <= 1
+
+    def test_snapshot_restore_preserves_filter(self):
+        cfgp = PipelineConfig(seq_len=64, batch_size=2, duplicate_fraction=0.3, seed=3)
+        pipe = DedupPipeline(cfgp)
+        list(pipe.batches(2, docs_per_step=128))
+        snap = pipe.snapshot()
+        seen_before = pipe.state.docs_seen
+
+        pipe2 = DedupPipeline(cfgp)
+        pipe2.restore(snap)
+        assert pipe2.state.docs_seen == seen_before
+        # re-offering the same originals must now be dropped as dups
+        ids = np.asarray(pipe.corpus._originals[:50], np.uint32)
+        keep = pipe2._dedup(ids)
+        assert not keep.any()
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last_k=2)
+        state = {"a": jnp.arange(10, dtype=jnp.float32), "b": {"c": jnp.ones((3, 3))}}
+        mgr.save(5, state)
+        assert mgr.latest_step() == 5
+        got = mgr.restore(5, jax.eval_shape(lambda: state))
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(10, dtype=np.float32))
+
+    def test_gc_keeps_last_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last_k=2)
+        state = {"x": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+        assert steps == ["step_00000003", "step_00000004"]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"x": jnp.arange(1000)}
+        mgr.save(1, state, background=True)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_corruption_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"x": jnp.arange(16, dtype=jnp.int32)}
+        mgr.save(1, state)
+        # flip bytes in the shard
+        import numpy as np_
+
+        p = tmp_path / "step_00000001" / "shard_0.npz"
+        data = dict(np_.load(p))
+        data["leaf_0"] = data["leaf_0"] + 1
+        np_.savez(p, **data)
+        with pytest.raises(IOError):
+            mgr.restore(1, jax.eval_shape(lambda: state))
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"x": jnp.zeros(4)})
+        with pytest.raises(ValueError):
+            mgr.restore(1, jax.eval_shape(lambda: {"x": jnp.zeros(4), "y": jnp.zeros(2)}))
+
+
+class TestFaultTolerance:
+    def _fake_clock(self):
+        t = [0.0]
+
+        def clock():
+            return t[0]
+
+        return t, clock
+
+    def test_heartbeat_death_and_rescale(self):
+        t, clock = self._fake_clock()
+        cfg = FTConfig(heartbeat_timeout_s=30)
+        mon = ClusterMonitor([f"h{i}" for i in range(8)], cfg, clock=clock)
+        t[0] = 10.0
+        for h in ("h0", "h1", "h2", "h3", "h4", "h5"):
+            mon.heartbeat(h)
+        t[0] = 35.0  # h6, h7 (last beat t=0) missed the 30s timeout
+        dead = mon.sweep()
+        assert set(dead) == {"h6", "h7"}
+        plan = plan_rescale(mon, current_dp=4, hosts_per_replica=2, cfg=cfg)
+        assert plan.action == "restore_rescale"
+        assert plan.data_parallel == 3  # 6 healthy / 2 per replica
+
+    def test_halt_below_min(self):
+        t, clock = self._fake_clock()
+        cfg = FTConfig(min_data_parallel=3)
+        mon = ClusterMonitor(["h0", "h1", "h2", "h3"], cfg, clock=clock)
+        t[0] = 100.0
+        mon.sweep()  # everyone dead
+        plan = plan_rescale(mon, current_dp=4, hosts_per_replica=1, cfg=cfg)
+        assert plan.action == "halt"
+
+    def test_straggler_suspects(self):
+        t, clock = self._fake_clock()
+        cfg = FTConfig(step_deadline_s=10, suspect_strikes=2)
+        mon = ClusterMonitor(["h0", "h1"], cfg, clock=clock)
+        mon.step_completed(50.0, slow_hosts=["h1"])
+        assert mon.state["h1"] is HostState.HEALTHY
+        mon.step_completed(50.0, slow_hosts=["h1"])
+        assert mon.state["h1"] is HostState.SUSPECT
+        mon.heartbeat("h1")
+        assert mon.state["h1"] is HostState.HEALTHY
+
+    def test_supervisor_restores_on_failure(self):
+        t, clock = self._fake_clock()
+        cfg = FTConfig()
+        mon = ClusterMonitor(["h0", "h1", "h2", "h3"], cfg, clock=clock)
+        restored = []
+        sup = TrainSupervisor(
+            mon, cfg, hosts_per_replica=1, current_dp=4,
+            on_restore=lambda dp: restored.append(dp),
+        )
+        out = sup.run_step(lambda: {"loss": 1.0})
+        assert out is not None
+        t[0] = 100.0
+        mon.heartbeat("h0"); mon.heartbeat("h1"); mon.heartbeat("h2")
+        out = sup.run_step(lambda: {"loss": 1.0})
+        assert out is None and restored == [3] and sup.restarts == 1
+
+
+class TestOptimizer:
+    def test_adamw_reduces_loss(self):
+        ocfg = optim.OptConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = optim.init(params, ocfg)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(50):
+            g = jax.grad(loss)(params)
+            params, opt, m = optim.apply(params, g, opt, ocfg)
+        assert float(loss(params)) < 0.1
+
+    def test_bf16_moments(self):
+        ocfg = optim.OptConfig(opt_dtype="bfloat16")
+        params = {"w": jnp.ones((4, 4))}
+        opt = optim.init(params, ocfg)
+        assert opt.mu["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.full((4, 4), 0.1)}
+        p2, opt2, _ = optim.apply(params, g, opt, ocfg)
+        assert jnp.all(jnp.isfinite(p2["w"]))
+
+    def test_grad_compression_error_feedback(self):
+        """EF-int8 compression: biased per-step but the residual carries
+        the error so the cumulative update converges to the true sum."""
+        ocfg = optim.OptConfig(compress_grads=True, lr=0.01, weight_decay=0.0,
+                               warmup_steps=1)
+        g = jnp.asarray([1e-4, 0.5, -0.3, 2.0])
+        err = jnp.zeros(4, jnp.bfloat16)
+        total = jnp.zeros(4)
+        for _ in range(64):
+            deq, err = optim.compress_int8(g, err)
+            total = total + deq
+        np.testing.assert_allclose(np.asarray(total / 64), np.asarray(g), rtol=0.05, atol=1e-4)
+
+    def test_schedule_warmup_and_decay(self):
+        ocfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(optim.schedule(ocfg, 5)) == pytest.approx(0.5)
+        assert float(optim.schedule(ocfg, 10)) == pytest.approx(1.0)
+        assert float(optim.schedule(ocfg, 100)) == pytest.approx(0.1, abs=0.01)

@@ -1,0 +1,122 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles.
+
+Sweeps (q, r, n, tile sizes); asserts exact equality (integer data
+structures — no tolerance needed) against ref.py and repro.core.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quotient_filter as qf
+from repro.kernels import ops, ref
+from repro.kernels.qf_build import qf_build_planes
+from repro.kernels.qf_probe import qf_probe_tiles
+
+
+def _mkfilter(q, r, n, seed=0, max_load=1.0, slack=1024):
+    cfg = qf.QFConfig(q=q, r=r, slack=slack, max_load=max_load)
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.int64).astype(np.uint32))
+    st = qf.insert(cfg, qf.empty(cfg), keys)
+    return cfg, st, keys, rng
+
+
+@pytest.mark.parametrize("q,r,n", [(8, 8, 100), (10, 12, 700), (12, 6, 3000), (14, 16, 12000)])
+@pytest.mark.parametrize("block_s", [128, 256])
+def test_build_kernel_matches_core(q, r, n, block_s):
+    cfg, st_ref, keys, _ = _mkfilter(q, r, n)
+    fq, fr = qf.fingerprints(cfg, keys)
+    fq, fr = qf._pad_sort(fq, fr, jnp.ones(fq.shape, bool))
+    st_ker = ops.build_sorted(cfg, fq, fr, n, block_s=block_s)
+    for name, a, b in zip(st_ref._fields, st_ref, st_ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_build_kernel_matches_ref_oracle():
+    """Kernel vs the independent ref.py scatter oracle."""
+    cfg, st, keys, _ = _mkfilter(10, 10, 600)
+    fq, fr = qf.fingerprints(cfg, keys)
+    fq, fr = qf._pad_sort(fq, fr, jnp.ones(fq.shape, bool))
+    idx = jnp.arange(fq.shape[0], dtype=jnp.int32)
+    pos = idx + jnp.maximum.accumulate(fq - idx)
+    con_b = (idx > 0) & (fq == jnp.roll(fq, 1)) & (fq < 2**30)
+    shf_b = (pos != fq) & (fq < 2**30)
+    spos = jnp.where(fq < 2**30, pos, jnp.int32(2**31 - 1))
+    rem_ref, meta_ref, _ = ref.build_ref(
+        cfg.total_slots, spos, fq, fr.astype(jnp.int32), con_b, shf_b
+    )
+    meta_bits = con_b.astype(jnp.int32) | (shf_b.astype(jnp.int32) << 1)
+    rem_ker, meta_ker = qf_build_planes(spos, fr, meta_bits, cfg.total_slots)
+    np.testing.assert_array_equal(np.asarray(rem_ref), np.asarray(rem_ker))
+    np.testing.assert_array_equal(np.asarray(meta_ref), np.asarray(meta_ker))
+
+
+@pytest.mark.parametrize("q,r,n,load", [(8, 8, 180, 0.7), (10, 10, 900, 0.9), (12, 12, 2000, 0.5)])
+@pytest.mark.parametrize("tile_t,wblk", [(128, 1024), (256, 512)])
+def test_probe_kernel_matches_exact(q, r, n, load, tile_t, wblk):
+    cfg, st, keys, rng = _mkfilter(q, r, n, max_load=load)
+    probes = jnp.concatenate(
+        [keys, jnp.asarray(rng.integers(0, 2**32, size=2 * n, dtype=np.int64).astype(np.uint32))]
+    )
+    fq, fr = qf.fingerprints(cfg, probes)
+    exact = qf.lookup_exact(cfg, st, fq, fr)
+    got = ops.lookup(cfg, st, fq, fr, tile_t=tile_t, wblk=wblk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exact))
+
+
+def test_probe_kernel_matches_ref_oracle():
+    """Kernel windowed decode vs the independent ref.py window oracle,
+    on queries whose tiles fit (non-overflow path)."""
+    cfg, st, keys, rng = _mkfilter(10, 8, 500, max_load=0.6)
+    fq, fr = qf.fingerprints(cfg, keys)
+    order = jnp.argsort(fq)
+    fq_s, fr_s = fq[order], fr[order]
+    pad = (-fq_s.shape[0]) % 128
+    fq_s = jnp.concatenate([fq_s, jnp.repeat(fq_s[-1:], pad)])
+    fr_s = jnp.concatenate([fr_s, jnp.repeat(fr_s[-1:], pad)])
+    present, ovf = qf_probe_tiles(
+        st.rem.astype(jnp.int32),
+        st.occ.astype(jnp.int32),
+        st.shf.astype(jnp.int32),
+        st.con.astype(jnp.int32),
+        fq_s,
+        fr_s,
+        tile_t=128,
+        wblk=1024,
+    )
+    ref_present, ref_ovf = ref.probe_ref(
+        st.rem.astype(jnp.int32),
+        st.occ.astype(jnp.int32),
+        st.shf.astype(jnp.int32),
+        st.con.astype(jnp.int32),
+        fq_s,
+        fr_s.astype(jnp.int32),
+        window=256,
+    )
+    ok = ~(np.asarray(ovf) > 0) & ~np.asarray(ref_ovf)
+    np.testing.assert_array_equal(
+        np.asarray(present)[ok] > 0, np.asarray(ref_present)[ok]
+    )
+    assert ok.mean() > 0.95  # overflow must be rare at this load
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint32, jnp.int32, jnp.uint16])
+def test_key_dtypes(dtype):
+    cfg = qf.QFConfig(q=10, r=10, slack=512)
+    keys = jnp.arange(500, dtype=dtype)
+    st = qf.insert(cfg, qf.empty(cfg), keys)
+    assert bool(ops.contains(cfg, st, keys).all())
+
+
+def test_high_load_overflow_fallback():
+    """At 95% load, clusters exceed any window — the exact fallback
+    inside the kernel wrapper must keep answers correct."""
+    cfg, st, keys, rng = _mkfilter(9, 12, 486, max_load=0.95)
+    probes = jnp.concatenate(
+        [keys, jnp.asarray(rng.integers(0, 2**32, size=1000, dtype=np.int64).astype(np.uint32))]
+    )
+    fq, fr = qf.fingerprints(cfg, probes)
+    exact = qf.lookup_exact(cfg, st, fq, fr)
+    got = ops.lookup(cfg, st, fq, fr, tile_t=128, wblk=256)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exact))

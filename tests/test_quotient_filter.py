@@ -1,0 +1,210 @@
+"""Unit + property tests for the bulk-parallel quotient filter."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quotient_filter as qf
+
+from reference_qf import PaperQF
+
+
+def _keys(rng, n, lo=0, hi=2**31):
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+CFG = qf.QFConfig(q=10, r=9, slack=512)
+
+
+class TestBasics:
+    def test_empty_contains_nothing(self, rng):
+        st_ = qf.empty(CFG)
+        assert not bool(qf.contains(CFG, st_, _keys(rng, 100)).any())
+
+    def test_no_false_negatives(self, rng):
+        st_ = qf.insert(CFG, qf.empty(CFG), _keys(rng, 700))
+        # reuse same rng stream won't reproduce keys; regenerate
+        rng2 = np.random.default_rng(0)
+        ks = _keys(rng2, 700)
+        assert bool(qf.contains(CFG, st_, ks).all())
+        assert bool(qf.lookup_exact(CFG, st_, *qf.fingerprints(CFG, ks)).all())
+        assert not bool(st_.overflow)
+
+    def test_fp_rate_close_to_theory(self, rng):
+        n = 700
+        st_ = qf.insert(CFG, qf.empty(CFG), _keys(rng, n))
+        probes = _keys(rng, 300_000, lo=2**31, hi=2**32)
+        fp = float(qf.contains(CFG, st_, probes).mean())
+        expected = n / 2 ** (CFG.q + CFG.r)  # 1 - e^{-n/2^p} ~ n/2^p
+        assert fp < 4 * expected + 1e-4
+        assert fp > expected / 4
+
+    def test_multiset_duplicates(self, rng):
+        ks = _keys(rng, 50)
+        st_ = qf.insert(CFG, qf.empty(CFG), jnp.concatenate([ks, ks]))
+        assert int(st_.n) == 100
+        st_ = qf.delete(CFG, st_, ks)  # removes one copy of each
+        assert int(st_.n) == 50
+        assert bool(qf.contains(CFG, st_, ks).all())
+        st_ = qf.delete(CFG, st_, ks)
+        assert int(st_.n) == 0
+
+    def test_extract_build_roundtrip(self, rng):
+        st_ = qf.insert(CFG, qf.empty(CFG), _keys(rng, 600))
+        fq, fr, n = qf.extract(CFG, st_)
+        st2 = qf.build_sorted(CFG, fq, fr, n)
+        for a, b in zip(st_, st2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_extract_is_sorted(self, rng):
+        st_ = qf.insert(CFG, qf.empty(CFG), _keys(rng, 600))
+        fq, fr, n = qf.extract(CFG, st_)
+        fqn = np.asarray(fq)[: int(n)]
+        frn = np.asarray(fr)[: int(n)]
+        comb = fqn.astype(np.int64) * 2**32 + frn
+        assert (np.diff(comb) >= 0).all()
+
+    def test_windowed_matches_exact_at_high_load(self, rng):
+        cfg = qf.QFConfig(q=10, r=9, slack=512, max_load=0.9)
+        ks = _keys(rng, 920)  # ~90% load: long clusters stress the window
+        st_ = qf.insert(cfg, qf.empty(cfg), ks)
+        probes = jnp.concatenate([ks, _keys(rng, 2000, lo=2**31, hi=2**32)])
+        fq, fr = qf.fingerprints(cfg, probes)
+        exact = qf.lookup_exact(cfg, st_, fq, fr)
+        for window in (16, 64, 256):
+            win = qf.lookup(cfg, st_, fq, fr, window)
+            np.testing.assert_array_equal(np.asarray(win), np.asarray(exact))
+
+
+class TestPaperParity:
+    """Bulk-parallel build must reproduce the paper's item-at-a-time
+    structure bit-for-bit."""
+
+    @pytest.mark.parametrize("n,seed", [(50, 1), (300, 2), (700, 3), (950, 4)])
+    def test_structure_matches_paper_insert(self, n, seed):
+        rng = np.random.default_rng(seed)
+        cfg = qf.QFConfig(q=10, r=8, slack=256, max_load=1.0)
+        keys = _keys(rng, n)
+        fq, fr = qf.fingerprints(cfg, keys)
+        fqn, frn = np.asarray(fq), np.asarray(fr)
+
+        ref = PaperQF(cfg.q, cfg.r, cfg.slack)
+        for a, b in zip(fqn, frn):
+            ref.insert(int(a), int(b))
+
+        st_ = qf.insert(cfg, qf.empty(cfg), keys)
+        rem, occ, shf, con = ref.planes()
+        used = np.asarray(st_.occ) | np.asarray(st_.shf)
+        np.testing.assert_array_equal(np.asarray(st_.occ), np.asarray(occ, bool))
+        np.testing.assert_array_equal(np.asarray(st_.shf), np.asarray(shf, bool))
+        np.testing.assert_array_equal(np.asarray(st_.con), np.asarray(con, bool))
+        # remainders compare only on used slots (free slots are don't-care)
+        np.testing.assert_array_equal(
+            np.asarray(st_.rem)[used], np.asarray(rem, np.uint32)[used]
+        )
+
+    def test_contains_matches_paper(self):
+        rng = np.random.default_rng(7)
+        cfg = qf.QFConfig(q=8, r=6, slack=256)
+        keys = _keys(rng, 150)
+        fq, fr = map(np.asarray, qf.fingerprints(cfg, keys))
+        ref = PaperQF(cfg.q, cfg.r, cfg.slack)
+        for a, b in zip(fq, fr):
+            ref.insert(int(a), int(b))
+        st_ = qf.insert(cfg, qf.empty(cfg), keys)
+        probes = _keys(rng, 3000, lo=0, hi=2**32)
+        pq, pr = map(np.asarray, qf.fingerprints(cfg, probes))
+        got = np.asarray(qf.lookup(cfg, st_, jnp.asarray(pq), jnp.asarray(pr)))
+        want = np.array([ref.contains(int(a), int(b)) for a, b in zip(pq, pr)])
+        np.testing.assert_array_equal(got, want)
+
+
+class TestMergeResize:
+    def test_merge_equals_union(self, rng):
+        a, b = _keys(rng, 300), _keys(rng, 300, lo=2**31, hi=2**32)
+        cfg = qf.QFConfig(q=10, r=10, slack=512)
+        sa = qf.insert(cfg, qf.empty(cfg), a)
+        sb = qf.insert(cfg, qf.empty(cfg), b)
+        big = qf.QFConfig(q=11, r=9, slack=512)
+        sm = qf.merge(big, cfg, cfg, sa, sb)
+        assert int(sm.n) == 600
+        both = jnp.concatenate([a, b])
+        assert bool(qf.contains(big, sm, both).all())
+        # merged filter fingerprints == direct-build fingerprints
+        direct = qf.insert(big, qf.empty(big), both)
+        for x, y in zip(sm, direct):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_resize_preserves_fingerprints(self, rng):
+        cfg = qf.QFConfig(q=10, r=10, slack=512)
+        ks = _keys(rng, 700)
+        st_ = qf.insert(cfg, qf.empty(cfg), ks)
+        up_cfg, up = qf.resize(cfg, st_, 12)
+        assert up_cfg.r == 8
+        assert bool(qf.contains(up_cfg, up, ks).all())
+        down_cfg, down = qf.resize(up_cfg, up, 10)
+        for x, y in zip(down, st_):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_multi_merge(self, rng):
+        cfg = qf.QFConfig(q=9, r=11, slack=256)
+        parts, all_keys = [], []
+        for i in range(4):
+            ks = _keys(rng, 150, lo=i * 2**28, hi=(i + 4) * 2**28)
+            all_keys.append(ks)
+            parts.append((cfg, qf.insert(cfg, qf.empty(cfg), ks)))
+        out_cfg = qf.QFConfig(q=11, r=9, slack=512)
+        merged = qf.multi_merge(out_cfg, parts)
+        assert int(merged.n) == 600
+        assert bool(qf.contains(out_cfg, merged, jnp.concatenate(all_keys)).all())
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        ops=st.lists(
+            st.tuples(st.booleans(), st.integers(0, 2**32 - 1)),
+            min_size=1,
+            max_size=120,
+        )
+    )
+    def test_never_false_negative_under_interleaving(self, ops):
+        """Any interleaving of inserts/deletes: a key inserted more times
+        than deleted must be reported present."""
+        cfg = qf.QFConfig(q=8, r=10, slack=256, max_load=1.0)
+        st_ = qf.empty(cfg)
+        counts: dict[int, int] = {}
+        for is_delete, key in ops:
+            arr = jnp.asarray([key], jnp.uint32)
+            if is_delete and counts.get(key, 0) > 0:
+                st_ = qf.delete(cfg, st_, arr)
+                counts[key] -= 1
+            elif not is_delete:
+                st_ = qf.insert(cfg, st_, arr)
+                counts[key] = counts.get(key, 0) + 1
+        live = [k for k, c in counts.items() if c > 0]
+        assert int(st_.n) == sum(counts.values())
+        if live:
+            got = qf.contains(cfg, st_, jnp.asarray(live, jnp.uint32))
+            assert bool(got.all())
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        keys=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=200),
+        q=st.integers(6, 12),
+    )
+    def test_roundtrip_any_shape(self, keys, q):
+        cfg = qf.QFConfig(q=q, r=10, slack=512, max_load=1.0)
+        arr = jnp.asarray(keys, jnp.uint32)
+        st_ = qf.insert(cfg, qf.empty(cfg), arr)
+        fq, fr, n = qf.extract(cfg, st_)
+        st2 = qf.build_sorted(cfg, fq, fr, n)
+        for a, b in zip(st_, st2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert bool(qf.contains(cfg, st_, arr).all())

@@ -1,0 +1,153 @@
+"""BQF / CF / BF-variant behaviour + I/O-schedule accounting tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bloom, quotient_filter as qf
+from repro.core.buffered_qf import BufferedQuotientFilter
+from repro.core.cascade_filter import CascadeFilter
+from repro.core.bf_variants import (
+    BufferedBloomFilter,
+    ElevatorBloomFilter,
+    ForestBloomFilter,
+)
+from repro.core.cost_model import PAPER_SSD, modeled_seconds
+
+
+def _keys(rng, n, lo=0, hi=2**31):
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(42)
+
+
+class TestBQF:
+    def test_membership_and_flushes(self, rng):
+        bqf = BufferedQuotientFilter(qf.QFConfig(q=9, r=15), qf.QFConfig(q=13, r=11))
+        ks = _keys(rng, 5000)
+        for i in range(0, 5000, 250):
+            bqf.insert(ks[i : i + 250])
+        assert bqf.count == 5000
+        assert bqf.io.flushes >= 10
+        assert bool(bqf.lookup(ks).all())
+
+    def test_lookup_io_short_circuits(self, rng):
+        bqf = BufferedQuotientFilter(qf.QFConfig(q=9, r=15), qf.QFConfig(q=13, r=11))
+        ks = _keys(rng, 1000)
+        bqf.insert(ks)
+        bqf.flush()
+        before = bqf.io.snapshot()
+        bqf.lookup(ks[:100])
+        # all 100 missed RAM (it was just flushed) -> 100 page reads
+        assert bqf.io.delta(before).rand_page_reads == 100
+
+    def test_flush_cost_is_sequential(self, rng):
+        bqf = BufferedQuotientFilter(qf.QFConfig(q=9, r=15), qf.QFConfig(q=13, r=11))
+        bqf.insert(_keys(rng, 300))  # below the 0.75 * 512 flush threshold
+        bqf.flush()
+        assert bqf.io.seq_write_bytes == bqf.disk_cfg.size_bytes
+        assert bqf.io.rand_page_writes == 0  # the whole point of the paper
+
+
+class TestCascade:
+    def test_membership_across_merges(self, rng):
+        cf = CascadeFilter(ram_q=8, p=26, fanout=2)
+        ks = _keys(rng, 4000)
+        for i in range(0, 4000, 200):
+            cf.insert(ks[i : i + 200])
+        assert cf.count == 4000
+        assert cf.io.merges > 0
+        assert bool(cf.lookup(ks).all())
+
+    def test_fp_rate(self, rng):
+        cf = CascadeFilter(ram_q=8, p=26, fanout=2)
+        for i in range(10):
+            cf.insert(_keys(rng, 400))
+        fp = float(cf.lookup(_keys(rng, 100_000, lo=2**31, hi=2**32)).mean())
+        assert fp < 8 * 4000 / 2**26 + 1e-4
+
+    @pytest.mark.parametrize("fanout", [2, 4, 16])
+    def test_fanout_level_count(self, rng, fanout):
+        cf = CascadeFilter(ram_q=8, p=26, fanout=fanout)
+        for i in range(0, 6000, 200):
+            cf.insert(_keys(rng, 200))
+        # higher fanout => fewer levels (paper §5.3)
+        import math
+
+        expected_max = math.ceil(math.log(6000 / cf.q0_cfg.capacity, fanout)) + 1
+        assert cf.n_nonempty_levels() <= expected_max
+
+    def test_insert_io_beats_bqf_at_scale(self, rng):
+        """The paper's asymptotic claim: CF writes O(log(n/M)/B) per
+        insert vs BQF's O(n/(MB)) — at a large filter:RAM ratio the CF
+        moves fewer bytes."""
+        ram_q, p, n = 7, 26, 12_000
+        cf = CascadeFilter(ram_q=ram_q, p=p, fanout=2)
+        bqf = BufferedQuotientFilter(
+            qf.QFConfig(q=ram_q, r=p - ram_q), qf.QFConfig(q=14, r=p - 14)
+        )
+        rng2 = np.random.default_rng(7)
+        for i in range(0, n, 96):
+            batch = _keys(rng2, 96)
+            cf.insert(batch)
+            bqf.insert(batch)
+        cf_bytes = cf.io.seq_read_bytes + cf.io.seq_write_bytes
+        bqf_bytes = bqf.io.seq_read_bytes + bqf.io.seq_write_bytes
+        assert cf_bytes < bqf_bytes
+
+    def test_deamortized_accounting_smooth(self, rng):
+        cf = CascadeFilter(ram_q=8, p=26, fanout=2, deamortize=True)
+        for i in range(0, 3000, 100):
+            cf.insert(_keys(rng, 100))
+        # merges happened but some of their I/O is still pending
+        assert cf.io.merges > 0
+
+
+class TestBFVariants:
+    def test_ebf(self, rng):
+        cfg = bloom.BloomConfig(m_bits=1 << 18, k=6)
+        ebf = ElevatorBloomFilter(cfg, buffer_capacity_bits=4096)
+        ks = _keys(rng, 3000)
+        for i in range(0, 3000, 500):
+            ebf.insert(ks[i : i + 500])
+        assert bool(ebf.lookup(ks).all())
+        assert ebf.io.flushes > 0 and ebf.io.rand_page_writes > 0
+
+    def test_bbf_localized_lookup_io(self, rng):
+        cfg = bloom.BloomConfig(m_bits=1 << 24, k=12)
+        bbf = BufferedBloomFilter(cfg, ram_bytes=1 << 14)
+        ks = _keys(rng, 2000)
+        bbf.insert(ks)
+        before = bbf.io.snapshot()
+        bbf.lookup(ks[:100])  # successful lookups: ~k pages each (paper §5.2)
+        reads = bbf.io.delta(before).rand_page_reads
+        assert 100 * 4 <= reads <= 100 * 12
+
+    def test_fbf_layers_and_membership(self, rng):
+        fbf = ForestBloomFilter(bits_per_element=12.0, ram_bytes=1024, total_elements=8000)
+        ks = _keys(rng, 4000)
+        for i in range(0, 4000, 250):
+            fbf.insert(ks[i : i + 250])
+        assert len(fbf.layers) >= 2
+        assert bool(fbf.lookup(ks).all())
+
+    def test_counting_bloom_delete(self, rng):
+        cfg = bloom.BloomConfig(m_bits=1 << 16, k=6, counting=True)
+        bits = bloom.insert(cfg, bloom.empty(cfg), _keys(rng, 500))
+        rng2 = np.random.default_rng(42)
+        ks = _keys(rng2, 500)
+        bits = bloom.counting_delete(cfg, bits, ks[:250])
+        assert bool(bloom.lookup(cfg, bits, ks[250:]).all())
+
+
+class TestCostModel:
+    def test_paper_constants(self):
+        from repro.core.cost_model import IOLog
+
+        log = IOLog(rand_page_reads=3200, rand_page_writes=0)
+        assert abs(modeled_seconds(log, PAPER_SSD) - 1.0) < 1e-9
+        log = IOLog(seq_write_bytes=int(109e6))
+        assert abs(modeled_seconds(log, PAPER_SSD) - 1.0) < 1e-9
