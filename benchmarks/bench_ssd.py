@@ -15,11 +15,11 @@ dominance (paper: >=1.6x).
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
+from repro import filters
 from repro.core import bloom, quotient_filter as qf
-from repro.core.buffered_qf import BufferedQuotientFilter
-from repro.core.cascade_filter import CascadeFilter
 from repro.core.bf_variants import (
     BufferedBloomFilter,
     ElevatorBloomFilter,
@@ -34,13 +34,39 @@ P_BITS = 26  # fingerprint bits -> fp ~ 1/4096 at these loads
 FP = 1 / 4096
 
 
+class _Functional:
+    """Host adapter giving the functional ``(cfg, state)`` filters the
+    same insert/lookup/io surface as the BF-variant dataclasses.
+
+    Both step functions are jitted with donated state — the unified
+    API's design property: flush/merge triggers and I/O accounting are
+    device arithmetic, so the whole ingest runs as compiled programs."""
+
+    def __init__(self, name: str, **spec):
+        self.cfg, self.state = filters.make(name, **spec)
+        self._insert = jax.jit(
+            lambda s, ks: filters.insert(self.cfg, s, ks), donate_argnums=0
+        )
+        self._probe = jax.jit(
+            lambda s, ks: filters.probe(self.cfg, s, ks), donate_argnums=0
+        )
+
+    def insert(self, keys) -> None:
+        self.state = self._insert(self.state, keys)
+
+    def lookup(self, keys):
+        self.state, hit = self._probe(self.state, keys)
+        return hit
+
+    @property
+    def io(self):
+        return filters.to_iolog(self.state.io)
+
+
 def _mk_structs(ratio: int, n_total: int):
     disk_q = RAM_Q + max(2, int(np.ceil(np.log2(ratio * 1.8))))
-    bqf = BufferedQuotientFilter(
-        qf.QFConfig(q=RAM_Q, r=P_BITS - RAM_Q),
-        qf.QFConfig(q=disk_q, r=P_BITS - disk_q),
-    )
-    cf = CascadeFilter(ram_q=RAM_Q, p=P_BITS, fanout=2)
+    bqf = _Functional("buffered_qf", ram_q=RAM_Q, disk_q=disk_q, p=P_BITS)
+    cf = _Functional("cascade", ram_q=RAM_Q, p=P_BITS, fanout=2, levels=6)
     k = 12
     m_bits = int(n_total * k / np.log(2))
     ram_bits = m_bits // ratio

@@ -4,6 +4,7 @@ workload), feeding a real training batch stream.
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
 
+from repro import filters
 from repro.data.pipeline import DedupPipeline, PipelineConfig
 
 
@@ -11,7 +12,7 @@ def main():
     pipe = DedupPipeline(
         PipelineConfig(
             seq_len=512, batch_size=4, duplicate_fraction=0.35,
-            dedup_ram_q=12, dedup_p=30, dedup_fanout=4,
+            dedup_ram_q=12, dedup_p=30, dedup_fanout=4, dedup_levels=4,
         )
     )
     for i, batch in enumerate(pipe.batches(10, docs_per_step=512)):
@@ -21,10 +22,11 @@ def main():
             f"kept={s.docs_kept} dropped(dup)={s.docs_dropped} "
             f"({100 * s.docs_dropped / max(s.docs_seen, 1):.1f}% dup rate)"
         )
-    f = pipe.filter
+    fs = filters.stats(pipe.filter_cfg, pipe.filter_state)
     print(
-        f"cascade filter: {f.count:,} digests across {f.n_nonempty_levels()} levels, "
-        f"{f.io.merges} merges, {f.size_bytes/1024:.0f} KiB modeled"
+        f"cascade filter: {int(fs['n']):,} digests across "
+        f"{int(fs['nonempty_levels'])} levels, {int(fs['merges'])} merges, "
+        f"{fs['size_bytes']/1024:.0f} KiB modeled"
     )
 
 

@@ -1,14 +1,17 @@
-"""Quickstart: the paper's data structures in five minutes.
+"""Quickstart: the paper's data structures through the one functional API.
+
+Every filter is an opaque ``(cfg, state)`` pair from ``repro.filters``;
+insert / contains / delete / merge are the same four verbs for every
+structure, and ingest loops compile into a single ``jax.lax.scan``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import quotient_filter as qf
-from repro.core.buffered_qf import BufferedQuotientFilter
-from repro.core.cascade_filter import CascadeFilter
+from repro import filters
 from repro.core.cost_model import PAPER_SSD, modeled_throughput
 
 
@@ -16,33 +19,55 @@ def main():
     rng = np.random.default_rng(0)
     keys = jnp.asarray(rng.integers(0, 2**32, 50_000, dtype=np.int64).astype(np.uint32))
 
-    # 1. Quotient filter (paper §3): insert / query / delete / resize
-    cfg = qf.QFConfig(q=16, r=12)  # 64k buckets, fp ~ alpha * 2^-12
-    st = qf.insert(cfg, qf.empty(cfg), keys[:40_000])
-    print("QF load:", float(qf.load(cfg, st)))
-    print("all present:", bool(qf.contains(cfg, st, keys[:40_000]).all()))
+    # 1. Quotient filter (paper §3): insert / query / delete
+    cfg, st = filters.make("qf", q=16, r=12)  # 64k buckets, fp ~ alpha * 2^-12
+    st = filters.insert(cfg, st, keys[:40_000])
+    print("QF load:", float(filters.stats(cfg, st)["load"]))
+    print("all present:", bool(filters.contains(cfg, st, keys[:40_000]).all()))
     absent = jnp.asarray(rng.integers(0, 2**32, 100_000, dtype=np.int64).astype(np.uint32))
-    print("fp rate:", float(qf.contains(cfg, st, absent).mean()), "~", 0.61 * 2**-12)
-    st = qf.delete(cfg, st, keys[:10_000])
-    print("after delete:", int(st.n))
-    big_cfg, big_st = qf.resize(cfg, st, 17)  # double it, no rehash
-    print("resized still present:", bool(qf.contains(big_cfg, big_st, keys[10_000:40_000]).all()))
+    print("fp rate:", float(filters.contains(cfg, st, absent).mean()), "~", 0.61 * 2**-12)
+    st = filters.delete(cfg, st, keys[:10_000])
+    print("after delete:", int(filters.stats(cfg, st)["n"]))
 
-    # 2. Buffered QF (paper §4): RAM buffer + sequential flush to "flash"
-    bqf = BufferedQuotientFilter(qf.QFConfig(q=12, r=16), qf.QFConfig(q=16, r=12))
-    for i in range(0, 50_000, 2_000):
-        bqf.insert(keys[i : i + 2_000])
-    print("BQF insert modeled ops/s on the paper's SSD:",
-          f"{modeled_throughput(50_000, bqf.io, PAPER_SSD):,.0f}")
+    # 2. Buffered QF (paper §4): RAM buffer + sequential flush to "flash".
+    #    The whole ingest loop is ONE jitted lax.scan — flush decisions are
+    #    lax.cond on device counts, I/O accounting lives in device counters.
+    bcfg, bst = filters.make("buffered_qf", ram_q=12, disk_q=16, p=28)
+    batches = keys.reshape(25, 2_000)
 
-    # 3. Cascade filter (paper §4): LSM-of-QFs, insert-optimized
-    cf = CascadeFilter(ram_q=12, p=28, fanout=2)
-    for i in range(0, 50_000, 2_000):
-        cf.insert(keys[i : i + 2_000])
-    print("CF levels:", cf.n_nonempty_levels(),
-          "merges:", cf.io.merges,
-          "insert modeled ops/s:", f"{modeled_throughput(50_000, cf.io, PAPER_SSD):,.0f}")
-    print("CF membership:", bool(cf.lookup(keys[:5_000]).all()))
+    @jax.jit
+    def ingest(state, key_batches):
+        step = lambda s, ks: (filters.insert(bcfg, s, ks), None)
+        return jax.lax.scan(step, state, key_batches)[0]
+
+    bst = ingest(bst, batches)
+    io = filters.to_iolog(bst.io)
+    print("BQF flushes:", io.flushes,
+          "| insert modeled ops/s on the paper's SSD:",
+          f"{modeled_throughput(50_000, io, PAPER_SSD):,.0f}")
+
+    # 3. Cascade filter (paper §4): LSM-of-QFs, insert-optimized — same verbs.
+    ccfg, cst = filters.make("cascade", ram_q=12, p=28, fanout=2, levels=4)
+
+    @jax.jit
+    def ingest_cf(state, key_batches):
+        step = lambda s, ks: (filters.insert(ccfg, s, ks), None)
+        return jax.lax.scan(step, state, key_batches)[0]
+
+    cst = ingest_cf(cst, batches)
+    s = filters.stats(ccfg, cst)
+    print("CF levels:", int(s["nonempty_levels"]),
+          "merges:", int(s["merges"]),
+          "insert modeled ops/s:",
+          f"{modeled_throughput(50_000, filters.to_iolog(cst.io), PAPER_SSD):,.0f}")
+    print("CF membership:", bool(filters.contains(ccfg, cst, keys[:5_000]).all()))
+
+    # 4. Same API, different engine: route QF build/probe through the
+    #    Pallas kernels (interpret mode on CPU, Mosaic on TPU).
+    kcfg, kst = filters.make("qf", q=14, r=12, backend="pallas")
+    kst = filters.insert(kcfg, kst, keys[:10_000])
+    print("pallas backend membership:",
+          bool(filters.contains(kcfg, kst, keys[:10_000]).all()))
 
 
 if __name__ == "__main__":

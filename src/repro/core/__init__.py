@@ -3,6 +3,12 @@
 Quotient filter (§3), buffered quotient filter and cascade filter (§4),
 plus the Bloom-filter baselines (§2) and the memory-hierarchy cost
 model that stands in for the paper's SSD.
+
+Prefer the unified functional façade in :mod:`repro.filters` for new
+code: ``filters.make(name, **spec) -> (cfg, state)`` with jittable
+insert/contains/delete/merge over pure pytree states.  The
+``BufferedQuotientFilter``/``CascadeFilter`` dataclasses here are
+deprecated host-driven shims.
 """
 
 from . import bf_variants, bloom, cost_model, fingerprint, quotient_filter

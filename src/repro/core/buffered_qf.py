@@ -1,4 +1,12 @@
-"""Buffered quotient filter (paper §4).
+"""Buffered quotient filter (paper §4) — legacy host-driven API.
+
+.. deprecated::
+    This dataclass is a thin shim over the functional implementation in
+    :mod:`repro.filters.buffered` (``repro.filters.make("buffered_qf", ...)``),
+    kept for host-driven callers and the historical tests.  New code
+    should use the ``repro.filters`` façade: its state is a pure pytree,
+    flush triggers are ``lax.cond`` on device scalars, and a whole
+    ingest loop jits into one ``lax.scan``.
 
 One QF in RAM buffers inserts; when it hits the paper's 3/4 load it is
 flushed into the (much larger) on-"disk" QF by a single sequential
@@ -12,10 +20,12 @@ the whole disk structure once.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax.numpy as jnp
-import numpy as np
+
+from repro.filters import buffered as fb
+from repro.filters.iostats import to_iolog
 
 from . import quotient_filter as qf
 from .cost_model import IOLog
@@ -25,39 +35,50 @@ from .cost_model import IOLog
 class BufferedQuotientFilter:
     ram_cfg: qf.QFConfig
     disk_cfg: qf.QFConfig
-    io: IOLog = field(default_factory=IOLog)
 
     def __post_init__(self):
         if self.ram_cfg.q + self.ram_cfg.r != self.disk_cfg.q + self.disk_cfg.r:
             raise ValueError("RAM and disk QFs must share fingerprint width")
-        self.ram = qf.empty(self.ram_cfg)
-        self.disk = qf.empty(self.disk_cfg)
+        if self.ram_cfg.seed != self.disk_cfg.seed:
+            raise ValueError("RAM and disk QFs must share the hash seed")
+        self._fcfg, self._fstate = fb.make(
+            ram_q=self.ram_cfg.q,
+            disk_q=self.disk_cfg.q,
+            p=self.ram_cfg.q + self.ram_cfg.r,
+            slack=self.ram_cfg.slack,
+            disk_slack=self.disk_cfg.slack,
+            seed=self.ram_cfg.seed,
+            max_load=self.ram_cfg.max_load,
+        )
+
+    # -- state views ---------------------------------------------------------
+
+    @property
+    def ram(self) -> qf.QFState:
+        return self._fstate.ram
+
+    @property
+    def disk(self) -> qf.QFState:
+        return self._fstate.disk
+
+    @property
+    def io(self) -> IOLog:
+        """Host snapshot of the device-resident I/O counters."""
+        return to_iolog(self._fstate.io)
 
     @property
     def count(self) -> int:
-        return int(self.ram.n) + int(self.disk.n)
+        return int(self._fstate.ram.n) + int(self._fstate.disk.n)
+
+    # -- ops -----------------------------------------------------------------
 
     def insert(self, keys: jnp.ndarray) -> None:
-        self.ram = qf.insert(self.ram_cfg, self.ram, keys)
-        if float(qf.load(self.ram_cfg, self.ram)) >= self.ram_cfg.max_load:
-            self.flush()
+        self._fstate = fb.insert(self._fcfg, self._fstate, keys)
 
     def flush(self) -> None:
         """Sequential merge of the RAM QF into the disk QF (paper Fig. 5)."""
-        self.disk = qf.merge(
-            self.disk_cfg, self.disk_cfg, self.ram_cfg, self.disk, self.ram
-        )
-        self.ram = qf.empty(self.ram_cfg)
-        # stream old disk QF in, write merged QF out
-        self.io.seq_read_bytes += self.disk_cfg.size_bytes
-        self.io.seq_write_bytes += self.disk_cfg.size_bytes
-        self.io.flushes += 1
-        self.io.merges += 1
+        self._fstate = fb.flush(self._fcfg, self._fstate)
 
     def lookup(self, keys: jnp.ndarray) -> jnp.ndarray:
-        ram_hit = qf.contains(self.ram_cfg, self.ram, keys)
-        disk_hit = qf.contains(self.disk_cfg, self.disk, keys)
-        # short-circuit: only RAM misses touch the disk (1 page each)
-        if int(self.disk.n) > 0:
-            self.io.rand_page_reads += int(jnp.sum(~ram_hit))
-        return ram_hit | disk_hit
+        self._fstate, hit = fb.probe(self._fcfg, self._fstate, keys)
+        return hit

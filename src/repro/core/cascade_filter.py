@@ -1,4 +1,12 @@
-"""Cascade filter (paper §4) — the insert-optimized on-flash AMQ.
+"""Cascade filter (paper §4) — legacy host-driven API.
+
+.. deprecated::
+    New code should use the functional implementation behind the
+    ``repro.filters`` façade (``repro.filters.make("cascade", ...)``):
+    pytree state, ``lax.switch`` merge-downs on device counts, device
+    I/O counters, one ``lax.scan`` per ingest loop.  This dataclass
+    stays for host-driven callers that want lazily allocated levels or
+    the deamortized I/O accounting below.
 
 COLA-style hierarchy: a small RAM quotient filter Q0 plus on-"disk"
 QFs Q_1..Q_l whose capacities grow geometrically with the fanout b.

@@ -315,6 +315,19 @@ def contains(cfg: QFConfig, state: QFState, keys: jnp.ndarray, window: int = 256
 # ---------------------------------------------------------------------------
 
 
+def merge_sorted_with(cfg: QFConfig, state: QFState, fq, fr, k, build) -> QFState:
+    """insert_sorted body with a pluggable build pass (reference or kernel)."""
+    qs, rs, n = extract(cfg, state)
+    allq = jnp.concatenate([qs, fq])
+    allr = jnp.concatenate([rs, fr])
+    valid = jnp.concatenate(
+        [jnp.arange(qs.shape[0]) < n, jnp.arange(fq.shape[0]) < jnp.asarray(k)]
+    )
+    allq, allr = _pad_sort(allq, allr, valid)
+    new = build(cfg, allq, allr, n + jnp.asarray(k, jnp.int32))
+    return new._replace(overflow=new.overflow | state.overflow)
+
+
 @functools.partial(jax.jit, static_argnums=0)
 def insert_sorted(cfg: QFConfig, state: QFState, fq, fr, k) -> QFState:
     """Insert a sorted batch of k fingerprints (merge + rebuild).
@@ -323,15 +336,7 @@ def insert_sorted(cfg: QFConfig, state: QFState, fq, fr, k) -> QFState:
     the filter — sequential I/O in the paper, sequential HBM traffic
     here.  Duplicates are kept (QF is a multiset).
     """
-    qs, rs, n = extract(cfg, state)
-    allq = jnp.concatenate([qs, fq])
-    allr = jnp.concatenate([rs, fr])
-    valid = jnp.concatenate(
-        [jnp.arange(qs.shape[0]) < n, jnp.arange(fq.shape[0]) < jnp.asarray(k)]
-    )
-    allq, allr = _pad_sort(allq, allr, valid)
-    new = build_sorted(cfg, allq, allr, n + jnp.asarray(k, jnp.int32))
-    return new._replace(overflow=new.overflow | state.overflow)
+    return merge_sorted_with(cfg, state, fq, fr, k, build_sorted)
 
 
 def insert(cfg: QFConfig, state: QFState, keys: jnp.ndarray, k=None) -> QFState:

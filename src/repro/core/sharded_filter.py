@@ -26,6 +26,33 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import quotient_filter as qf
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: top-level ``jax.shard_map`` (>=0.5,
+    ``check_vma=``) vs ``jax.experimental.shard_map`` (0.4.x, ``check_rep=``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def _dispatch_capacity(cfg: "ShardedQFConfig", per_shard: int) -> int:
+    """Per-(src, dst) bucket capacity for the fixed-size all_to_all.
+
+    A source shard holding ``per_shard`` keys routes ~per_shard/n_shards
+    to each owner; sizing is mean + capacity_factor standard deviations
+    of the Binomial(per_shard, 1/n) tail (ceil, min 8, multiple of 8) so
+    skewed routing does not silently drop keys.
+    """
+    mean = per_shard / cfg.n_shards
+    std = math.sqrt(per_shard * (1 / cfg.n_shards) * (1 - 1 / cfg.n_shards))
+    capacity = int(math.ceil(mean + max(6.0, cfg.capacity_factor) * std))
+    capacity = max(8, capacity)
+    return capacity + (-capacity) % 8
+
+
 class ShardedQFConfig(NamedTuple):
     q: int  # global log2 buckets
     r: int
@@ -103,8 +130,7 @@ def make_insert(cfg: ShardedQFConfig, mesh: Mesh, batch: int):
     runs unchanged.  Exactly the MoE-dispatch collective schedule.
     """
     per_shard = batch // cfg.n_shards
-    capacity = int(per_shard / cfg.n_shards * cfg.capacity_factor)
-    capacity = max(8, capacity + (-capacity) % 8)
+    capacity = _dispatch_capacity(cfg, per_shard)
     local = cfg.local_cfg
     axis = cfg.axis
 
@@ -126,12 +152,8 @@ def make_insert(cfg: ShardedQFConfig, mesh: Mesh, batch: int):
         return jax.tree.map(lambda x: x[None], new)
 
     def insert(state, keys):
-        return jax.shard_map(
-            mapped,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis)),
-            out_specs=P(axis),
-            check_vma=False,
+        return _shard_map(
+            mapped, mesh, in_specs=(P(axis), P(axis)), out_specs=P(axis)
         )(state, keys)
 
     return insert
@@ -140,8 +162,7 @@ def make_insert(cfg: ShardedQFConfig, mesh: Mesh, batch: int):
 def make_lookup(cfg: ShardedQFConfig, mesh: Mesh, batch: int):
     """Builds a jittable sharded lookup: (state, keys) -> present (B,)."""
     per_shard = batch // cfg.n_shards
-    capacity = int(per_shard / cfg.n_shards * cfg.capacity_factor)
-    capacity = max(8, capacity + (-capacity) % 8)
+    capacity = _dispatch_capacity(cfg, per_shard)
     local = cfg.local_cfg
     axis = cfg.axis
 
@@ -168,12 +189,8 @@ def make_lookup(cfg: ShardedQFConfig, mesh: Mesh, batch: int):
         return out
 
     def lookup(state, keys):
-        return jax.shard_map(
-            mapped,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis)),
-            out_specs=P(axis),
-            check_vma=False,
+        return _shard_map(
+            mapped, mesh, in_specs=(P(axis), P(axis)), out_specs=P(axis)
         )(state, keys)
 
     return lookup

@@ -17,10 +17,10 @@ from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.cascade_filter import CascadeFilter
-from repro.core import quotient_filter as qf
+from repro import filters
 
 
 @dataclass
@@ -31,6 +31,7 @@ class PipelineConfig:
     dedup_ram_q: int = 16  # Q0 buckets of the cascade filter
     dedup_p: int = 30  # fingerprint bits (fp rate ~ n * 2^-p)
     dedup_fanout: int = 4
+    dedup_levels: int = 3  # static disk-level depth of the cascade
     duplicate_fraction: float = 0.3  # synthetic corpus duplication rate
     doc_len_range: tuple = (64, 512)
     seed: int = 0
@@ -78,8 +79,12 @@ class DedupPipeline:
     def __init__(self, cfg: PipelineConfig):
         self.cfg = cfg
         self.corpus = SyntheticCorpus(cfg)
-        self.filter = CascadeFilter(
-            ram_q=cfg.dedup_ram_q, p=cfg.dedup_p, fanout=cfg.dedup_fanout
+        self.filter_cfg, self.filter_state = filters.make(
+            "cascade",
+            ram_q=cfg.dedup_ram_q,
+            p=cfg.dedup_p,
+            fanout=cfg.dedup_fanout,
+            levels=cfg.dedup_levels,
         )
         self.state = PipelineState()
 
@@ -87,15 +92,25 @@ class DedupPipeline:
         """Returns keep-mask; inserts the kept digests into the filter.
 
         Also dedups within the incoming batch itself (first occurrence
-        wins), exactly like a streaming crawler would."""
+        wins), exactly like a streaming crawler would.  The insert uses
+        a fixed-shape padded batch with a valid count, so the jitted
+        filter step compiles once per docs_per_step."""
         keys = jnp.asarray(doc_ids, jnp.uint32)
-        seen = np.asarray(self.filter.lookup(keys))
+        seen = np.asarray(filters.contains(self.filter_cfg, self.filter_state, keys))
         _, first_idx = np.unique(doc_ids, return_index=True)
         first_occurrence = np.zeros(len(doc_ids), bool)
         first_occurrence[first_idx] = True
         keep = (~seen) & first_occurrence
         if keep.any():
-            self.filter.insert(jnp.asarray(doc_ids[keep], jnp.uint32))
+            kept = doc_ids[keep]
+            padded = np.zeros(len(doc_ids), np.uint32)
+            padded[: len(kept)] = kept
+            self.filter_state = filters.insert(
+                self.filter_cfg,
+                self.filter_state,
+                jnp.asarray(padded),
+                k=int(keep.sum()),
+            )
         return keep
 
     def batches(self, n_batches: int, docs_per_step: int = 256) -> Iterator[dict]:
@@ -131,31 +146,29 @@ class DedupPipeline:
     # -- checkpointable state ------------------------------------------------
 
     def snapshot(self) -> dict:
-        lvls = []
-        for c, s in self.filter.levels:
-            lvls.append(
-                {
-                    "q": c.q,
-                    **{k: np.asarray(v) for k, v in s._asdict().items()},
-                }
-            )
+        """Filter state is one pytree: flatten to np leaves (pickles cleanly)."""
+        leaves = jax.tree_util.tree_leaves(self.filter_state)
         return {
             "docs_seen": self.state.docs_seen,
             "docs_kept": self.state.docs_kept,
             "docs_dropped": self.state.docs_dropped,
-            "q0": {k: np.asarray(v) for k, v in self.filter.q0._asdict().items()},
-            "levels": lvls,
+            "filter_leaves": [np.asarray(l) for l in leaves],
         }
 
     def restore(self, snap: dict) -> None:
         self.state.docs_seen = int(snap["docs_seen"])
         self.state.docs_kept = int(snap["docs_kept"])
         self.state.docs_dropped = int(snap["docs_dropped"])
-        self.filter.q0 = qf.QFState(**{k: jnp.asarray(v) for k, v in snap["q0"].items()})
-        self.filter.levels = []
-        for lv in snap["levels"]:
-            c = self.filter._cfg(int(lv["q"]))
-            s = qf.QFState(
-                **{k: jnp.asarray(v) for k, v in lv.items() if k != "q"}
+        cur = jax.tree_util.tree_leaves(self.filter_state)
+        new = snap["filter_leaves"]
+        if len(cur) != len(new) or any(
+            a.shape != b.shape or a.dtype != b.dtype for a, b in zip(cur, new)
+        ):
+            raise ValueError(
+                "snapshot filter state does not match this pipeline's dedup "
+                "config (ram_q/p/fanout/levels changed?) — refusing to restore"
             )
-            self.filter.levels.append((c, s))
+        treedef = jax.tree_util.tree_structure(self.filter_state)
+        self.filter_state = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(l) for l in new]
+        )

@@ -1,0 +1,138 @@
+"""``repro.filters`` — one functional AMQ API for the whole paper.
+
+The paper's pitch is that a single family of structures covers the
+RAM-to-flash spectrum with the same operations.  This package is that
+pitch as an API: every filter is an opaque ``(cfg, state)`` pair where
+``cfg`` is a hashable NamedTuple (jit-static) and ``state`` is a pure
+pytree, and every operation is jittable with donated state — flush and
+merge triggers are ``lax.cond``/``lax.switch`` on device scalars, so a
+full ingest loop runs under one ``jax.jit``/``jax.lax.scan`` with zero
+per-batch host syncs.
+
+Registry name -> implementation -> paper section:
+
+========================  =======================================================
+``"qf"``                  Quotient filter (§3): the in-RAM structure; insert,
+                          may-contain, delete, merge, all bulk-parallel.
+``"bloom"``               Bloom filter baseline (§2); ``counting=True`` gives the
+                          counting variant [3] with delete + additive merge.
+``"blocked_bloom"``       Hash-localized Bloom filter (§2, buffered BF of Canim
+                          et al.): all k probes in one block/page.
+``"buffered_qf"``         Buffered quotient filter (§4): RAM QF buffer flushed
+                          into a large flash QF by one streaming merge.
+``"cascade"``             Cascade filter (§4): COLA-style geometric hierarchy of
+                          QFs, insert-optimized; fixed-depth level stack.
+``"sharded_qf"``          Multi-device QF (§6 future work): quotient-prefix
+                          sharding + all_to_all dispatch on a device mesh.
+========================  =======================================================
+
+Quickstart::
+
+    from repro import filters
+
+    cfg, state = filters.make("qf", q=16, r=12)
+    state = filters.insert(cfg, state, keys)        # jittable, donatable
+    hits  = filters.contains(cfg, state, keys)      # bool[B], no false negatives
+    state = filters.delete(cfg, state, keys[:100])
+
+    # the same four verbs for every registered structure:
+    cfg, state = filters.make("cascade", ram_q=12, p=28, fanout=4, levels=4)
+    step = jax.jit(lambda s, ks: (filters.insert(cfg, s, ks), None))
+    state, _ = jax.lax.scan(step, state, key_batches)   # zero host syncs
+
+A ``backend="pallas"`` spec field on the QF-family filters routes the
+bandwidth-bound build/probe passes through the Pallas TPU kernels in
+``repro.kernels`` (interpret mode on CPU).  ``probe`` is ``contains``
+plus the paper's modeled I/O schedule accounted into device counters
+inside the state; convert with ``repro.filters.iostats.to_iolog``.
+"""
+
+from __future__ import annotations
+
+from . import bloom_filter, buffered, cascade, iostats, qf_filter, sharded  # noqa: F401 (registration)
+from .iostats import IOCounters, to_iolog
+from .registry import FilterImpl, by_cfg, by_name, names, register
+
+
+def make(name: str, **spec):
+    """Construct a filter by registry name: ``make(name, **spec) -> (cfg, state)``."""
+    return by_name(name).make(**spec)
+
+
+def insert(cfg, state, keys, k=None):
+    """Insert a key batch; ``k`` = optional valid-prefix count for padded batches."""
+    return by_cfg(cfg).insert(cfg, state, keys, k)
+
+
+def contains(cfg, state, keys):
+    """MAY-CONTAIN for a key batch (no false negatives)."""
+    return by_cfg(cfg).contains(cfg, state, keys)
+
+
+def delete(cfg, state, keys, k=None):
+    """Remove one copy of each key (check ``supports(cfg, "delete")``)."""
+    impl = by_cfg(cfg)
+    if not impl.deletable(cfg):
+        raise NotImplementedError(
+            f"{impl.name} does not support delete for this config"
+        )
+    return impl.delete(cfg, state, keys, k)
+
+
+def merge(cfg, state_a, state_b):
+    """Union two same-config filters into one state."""
+    impl = by_cfg(cfg)
+    if impl.merge is None:
+        raise NotImplementedError(f"{impl.name} does not support merge")
+    return impl.merge(cfg, state_a, state_b)
+
+
+def probe(cfg, state, keys):
+    """``contains`` + modeled I/O accounting: returns ``(state, hits)``.
+
+    Falls back to pure ``contains`` (state unchanged) for filters whose
+    state carries no I/O counters.
+    """
+    impl = by_cfg(cfg)
+    if impl.probe is None:
+        return state, impl.contains(cfg, state, keys)
+    return impl.probe(cfg, state, keys)
+
+
+def stats(cfg, state) -> dict:
+    """Device-scalar diagnostics (count, load, overflow, I/O counters...)."""
+    return by_cfg(cfg).stats(cfg, state)
+
+
+def supports(name_or_cfg, op: str) -> bool:
+    """Does filter ``name_or_cfg`` implement optional op ``"delete"``/``"merge"``?
+
+    Passing a cfg instance gives the config-exact answer (e.g. delete on
+    a plain non-counting Bloom is False); a name answers for the family.
+    """
+    if isinstance(name_or_cfg, str):
+        return getattr(by_name(name_or_cfg), op) is not None
+    impl = by_cfg(name_or_cfg)
+    if op == "delete":
+        return impl.deletable(name_or_cfg)
+    return getattr(impl, op) is not None
+
+
+__all__ = [
+    "FilterImpl",
+    "IOCounters",
+    "by_cfg",
+    "by_name",
+    "contains",
+    "delete",
+    "insert",
+    "iostats",
+    "make",
+    "merge",
+    "names",
+    "probe",
+    "register",
+    "stats",
+    "supports",
+    "to_iolog",
+]

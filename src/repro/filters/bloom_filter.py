@@ -1,0 +1,151 @@
+"""Bloom-filter family under the functional protocol (paper §2).
+
+* ``bloom`` — classic k-hash Bloom filter (double hashing).  With
+  ``counting=True`` the cells are 8-bit counters, enabling ``delete``
+  and exact ``merge`` (counter addition); the plain variant merges by
+  bitwise OR and does not register ``delete``.
+* ``blocked_bloom`` — hash-localized variant: all k probes of a key
+  land in one ``block_bits``-sized region (one cache line / flash page),
+  the in-RAM analogue of the paper's buffered Bloom filter [Canim et
+  al.].  Slightly worse FP rate, one-page lookups.
+
+States are bare cell arrays — already pytrees, fully jittable: uint8
+for plain bits, uint16 for counting cells (so a key inserted up to 64k
+times or a large merge cannot wrap a counter into a false negative;
+space is *accounted* at the paper's 4 bits per counter regardless).
+As with any counting Bloom filter, deleting a key that was never
+inserted corrupts the shared counters — don't.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.fingerprint import fmix32
+
+from .registry import FilterImpl, register
+
+
+class BloomFilterConfig(NamedTuple):
+    m_bits: int
+    k: int
+    seed: int = 0
+    counting: bool = False
+
+    @property
+    def core(self) -> bloom.BloomConfig:
+        return bloom.BloomConfig(
+            m_bits=self.m_bits, k=self.k, seed=self.seed, counting=self.counting
+        )
+
+
+class BlockedBloomConfig(NamedTuple):
+    m_bits: int
+    k: int
+    block_bits: int = 4096 * 8  # one 4 KiB page per key
+    seed: int = 0
+    counting: bool = False
+
+    @property
+    def n_blocks(self) -> int:
+        return max(1, self.m_bits // self.block_bits)
+
+    @property
+    def size_bytes(self) -> int:
+        cells = self.n_blocks * self.block_bits
+        return (cells * (4 if self.counting else 1) + 7) // 8
+
+
+def _indices(cfg, keys: jnp.ndarray) -> jnp.ndarray:
+    """(B, k) cell indices for either config flavor."""
+    if isinstance(cfg, BloomFilterConfig):
+        return bloom.bit_indices(cfg.core, keys)
+    # blocked: block via an independent hash, k cells inside the block
+    k32 = keys.astype(jnp.uint32)
+    blk = fmix32(k32 ^ jnp.uint32(cfg.seed * 2 + 0xB10C)) % jnp.uint32(cfg.n_blocks)
+    inner = bloom.bit_indices(
+        bloom.BloomConfig(m_bits=cfg.block_bits, k=cfg.k, seed=cfg.seed), keys
+    )
+    return blk.astype(jnp.int32)[:, None] * cfg.block_bits + inner
+
+
+def _cells(cfg) -> int:
+    if isinstance(cfg, BloomFilterConfig):
+        return cfg.m_bits
+    return cfg.n_blocks * cfg.block_bits
+
+
+def _masked(idx: jnp.ndarray, k) -> jnp.ndarray:
+    """Route cells of invalid (padding) keys to an out-of-range slot."""
+    if k is None:
+        return idx
+    valid = jnp.arange(idx.shape[0]) < jnp.asarray(k, jnp.int32)
+    return jnp.where(valid[:, None], idx, jnp.int32(2**31 - 1))
+
+
+def _cell_dtype(cfg):
+    return jnp.uint16 if cfg.counting else jnp.uint8
+
+
+def make_impl(cfg_cls, name: str, paper_section: str):
+    def make(**spec):
+        cfg = cfg_cls(**spec)
+        return cfg, jnp.zeros((_cells(cfg),), _cell_dtype(cfg))
+
+    def insert(cfg, state, keys, k=None):
+        idx = _masked(_indices(cfg, keys), k).reshape(-1)
+        if cfg.counting:
+            return state.at[idx].add(jnp.uint16(1), mode="drop")
+        return state.at[idx].max(jnp.uint8(1), mode="drop")
+
+    def contains(cfg, state, keys):
+        idx = _indices(cfg, keys)
+        return jnp.all(state[idx] > 0, axis=1)
+
+    def delete(cfg, state, keys, k=None):
+        if not cfg.counting:
+            raise NotImplementedError(
+                f"{name}: delete requires counting=True (plain bits can't unset)"
+            )
+        idx = _masked(_indices(cfg, keys), k).reshape(-1)
+        return state.at[idx].add(jnp.uint16(0xFFFF), mode="drop")  # wrapping -1
+
+    def merge(cfg, sa, sb):
+        if cfg.counting:
+            return sa + sb
+        return jnp.maximum(sa, sb)
+
+    def stats(cfg, state):
+        return {
+            "cells_set": jnp.sum((state > 0).astype(jnp.int32)),
+            "fill": jnp.mean((state > 0).astype(jnp.float32)),
+            "size_bytes": cfg.size_bytes if hasattr(cfg, "size_bytes") else cfg.core.size_bytes,
+        }
+
+    return register(
+        FilterImpl(
+            name=name,
+            paper_section=paper_section,
+            cfg_cls=cfg_cls,
+            make=make,
+            insert=insert,
+            contains=contains,
+            stats=stats,
+            delete=delete,
+            merge=merge,
+            can_delete=lambda cfg: cfg.counting,  # plain bits can't unset
+        )
+    )
+
+
+BLOOM = make_impl(
+    BloomFilterConfig, "bloom", "§2 (Bloom filter baseline; counting variant [3])"
+)
+BLOCKED_BLOOM = make_impl(
+    BlockedBloomConfig,
+    "blocked_bloom",
+    "§2 (hash localization — buffered Bloom filter, Canim et al.)",
+)

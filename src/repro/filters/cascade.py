@@ -1,0 +1,248 @@
+"""Cascade filter, functional (paper §4's insert-optimized on-flash AMQ).
+
+COLA-style hierarchy: RAM quotient filter Q0 plus a *fixed-depth* stack
+of on-"disk" QFs whose capacities grow geometrically with the fanout.
+The legacy ``core.cascade_filter`` dataclass drives merges from Python
+(``int(state.n)`` sync per batch, lazily allocated levels); here the
+level stack is a static-depth tuple inside one pytree state, and the
+merge-down decision is a ``jax.lax.switch`` over device counts:
+
+* target = smallest level i such that |Q0| + |Q1..Qi| fits level i's
+  capacity (the paper's collapse rule);
+* branch i k-way-merges Q0..Qi into a fresh Qi in one streaming pass
+  (``qf.multi_merge``) and empties everything above it;
+* branch L (no fit / Q0 not full) is the identity.
+
+Everything — including the modeled I/O schedule in ``IOCounters`` — is
+device arithmetic, so a full ingest loop compiles into one
+``jax.lax.scan`` with zero host transfers.  If Q0 fills and no level
+fits (undersized ``levels``), Q0 keeps absorbing into its slack and its
+``overflow`` flag eventually trips — sized like the legacy default
+(``levels >= log_b(n_total / capacity(Q0))``) this never happens.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+
+from . import iostats, qf_filter
+from .iostats import IOCounters
+from .registry import FilterImpl, register
+
+
+class CascadeConfig(NamedTuple):
+    ram_q: int  # log2 buckets of Q0
+    p: int  # fingerprint bits (q + r at every level)
+    fanout: int = 2  # power of two; level i has q = ram_q + (i+1)*log2(fanout)
+    levels: int = 4  # static level-stack depth
+    seed: int = 0
+    max_load: float = 0.75
+    backend: str = "reference"
+
+    @property
+    def lb(self) -> int:
+        return int(math.log2(self.fanout))
+
+    def _cfg(self, q: int) -> qf.QFConfig:
+        return qf.QFConfig(
+            q=q, r=self.p - q, slack=max(1024, (1 << q) // 64),
+            seed=self.seed, max_load=self.max_load,
+        )
+
+    @property
+    def q0_cfg(self) -> qf.QFConfig:
+        return self._cfg(self.ram_q)
+
+    def level_cfg(self, i: int) -> qf.QFConfig:
+        return self._cfg(self.ram_q + (i + 1) * self.lb)
+
+    @property
+    def size_bytes(self) -> int:
+        return self.q0_cfg.size_bytes + sum(
+            self.level_cfg(i).size_bytes for i in range(self.levels)
+        )
+
+
+class CascadeState(NamedTuple):
+    q0: qf.QFState
+    levels: tuple  # length cfg.levels, element i sized by cfg.level_cfg(i)
+    io: IOCounters
+
+
+def make(**spec):
+    cfg = CascadeConfig(**spec)
+    if cfg.fanout < 2 or (cfg.fanout & (cfg.fanout - 1)):
+        raise ValueError("fanout must be a power of two >= 2")
+    if cfg.levels < 1:
+        raise ValueError("need at least one disk level")
+    if cfg.ram_q + (cfg.levels) * cfg.lb >= cfg.p:
+        raise ValueError("fingerprint bits p too small for the deepest level")
+    qf_filter._check_backend(cfg)
+    return cfg, CascadeState(
+        q0=qf.empty(cfg.q0_cfg),
+        levels=tuple(qf.empty(cfg.level_cfg(i)) for i in range(cfg.levels)),
+        io=iostats.zeros(),
+    )
+
+
+def _collapse_into(cfg: CascadeConfig, state: CascadeState, i: int) -> CascadeState:
+    """Merge Q0..Q_i into a fresh Q_i; levels above i empty (paper Fig. 5)."""
+    parts = [(cfg.q0_cfg, state.q0)] + [
+        (cfg.level_cfg(j), state.levels[j]) for j in range(i + 1)
+    ]
+    tgt = cfg.level_cfg(i)
+    merged = qf.multi_merge(tgt, parts)
+    # I/O: stream each participating non-empty disk level in, target out
+    read = jnp.zeros((), jnp.float32)
+    for j in range(i + 1):
+        read = read + jnp.where(
+            state.levels[j].n > 0,
+            jnp.float32(cfg.level_cfg(j).size_bytes),
+            jnp.float32(0),
+        )
+    io = state.io._replace(
+        seq_read_bytes=state.io.seq_read_bytes + read,
+        seq_write_bytes=state.io.seq_write_bytes + tgt.size_bytes,
+        flushes=state.io.flushes + 1,
+        merges=state.io.merges + 1,
+    )
+    new_levels = tuple(
+        qf.empty(cfg.level_cfg(j)) if j < i else (merged if j == i else state.levels[j])
+        for j in range(cfg.levels)
+    )
+    return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=new_levels, io=io)
+
+
+def _maybe_collapse(cfg: CascadeConfig, state: CascadeState, full) -> CascadeState:
+    """lax.switch on the collapse target (branch cfg.levels = identity)."""
+    L = cfg.levels
+    ns = jnp.stack([s.n for s in state.levels])
+    cum = state.q0.n + jnp.cumsum(ns)
+    caps = jnp.asarray([cfg.level_cfg(i).capacity for i in range(L)], jnp.int32)
+    fits = cum <= caps
+    target = jnp.argmax(fits).astype(jnp.int32)  # first fitting level
+    branch = jnp.where(full & jnp.any(fits), target, jnp.int32(L))
+
+    def mk(i):
+        return lambda s: _collapse_into(cfg, s, i)
+
+    return jax.lax.switch(branch, [mk(i) for i in range(L)] + [lambda s: s], state)
+
+
+def insert(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
+    q0 = qf_filter.insert_keys(cfg.q0_cfg, cfg.backend, state.q0, keys, k)
+    state = state._replace(q0=q0)
+    return _maybe_collapse(cfg, state, qf.load(cfg.q0_cfg, q0) >= cfg.max_load)
+
+
+def _structures(cfg, state):
+    yield cfg.q0_cfg, state.q0
+    for i in range(cfg.levels):
+        yield cfg.level_cfg(i), state.levels[i]
+
+
+def contains(cfg: CascadeConfig, state, keys):
+    hit = jnp.zeros(keys.shape[0], jnp.bool_)
+    for c, s in _structures(cfg, state):
+        lvl = jax.lax.cond(
+            s.n > 0,
+            lambda s=s, c=c: qf_filter.contains_keys(c, cfg.backend, s, keys),
+            lambda: jnp.zeros(keys.shape[0], jnp.bool_),
+        )
+        hit = hit | lvl
+    return hit
+
+
+def probe(cfg: CascadeConfig, state, keys):
+    """Lookup with the paper's schedule: one random page read per
+    non-empty disk level for every query still unresolved at that level
+    (top-down short-circuit)."""
+    hit = qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys)
+    reads = jnp.zeros((), jnp.int32)
+    for i in range(cfg.levels):
+        c, s = cfg.level_cfg(i), state.levels[i]
+        pending = ~hit
+        nonempty = s.n > 0
+        reads = reads + jnp.where(
+            nonempty, jnp.sum(pending, dtype=jnp.int32), jnp.int32(0)
+        )
+        lvl = jax.lax.cond(
+            nonempty,
+            lambda s=s, c=c: qf_filter.contains_keys(c, cfg.backend, s, keys),
+            lambda: jnp.zeros(keys.shape[0], jnp.bool_),
+        )
+        hit = hit | (pending & lvl)
+    io = state.io._replace(rand_page_reads=state.io.rand_page_reads + reads)
+    return state._replace(io=io), hit
+
+
+def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
+    """Remove one copy per key from the topmost structure holding it.
+
+    Duplicate-safe: the j-th batch occurrence of a key targets the j-th
+    stored copy in top-down order, so a batch can delete more copies of
+    a key than any single level holds."""
+    valid = qf_filter.valid_mask(keys, k)
+    structures = [(cfg.q0_cfg, state.q0)] + [
+        (cfg.level_cfg(i), state.levels[i]) for i in range(cfg.levels)
+    ]
+    fq0, fr0 = qf.fingerprints(cfg.q0_cfg, keys)
+    rank = qf_filter.batch_occurrence_rank(fq0, fr0, valid)
+    cum = jnp.zeros(keys.shape[0], jnp.int32)
+    out = []
+    for c, s in structures:
+        fq, fr = qf.fingerprints(c, keys)
+        cnt = qf_filter.multiplicity(c, s, fq, fr)
+        todel = valid & (rank >= cum) & (rank < cum + cnt)
+        out.append(qf_filter.delete_masked(c, s, fq, fr, todel))
+        cum = cum + cnt
+    return state._replace(q0=out[0], levels=tuple(out[1:]))
+
+
+def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
+    """Union of two cascades (same cfg): component-wise QF merges, then
+    one collapse pass if the combined Q0 crossed its max load."""
+    q0 = qf.merge(cfg.q0_cfg, cfg.q0_cfg, cfg.q0_cfg, sa.q0, sb.q0)
+    levels = tuple(
+        qf.merge(cfg.level_cfg(i), cfg.level_cfg(i), cfg.level_cfg(i),
+                 sa.levels[i], sb.levels[i])
+        for i in range(cfg.levels)
+    )
+    state = CascadeState(q0=q0, levels=levels, io=iostats.add(sa.io, sb.io))
+    return _maybe_collapse(cfg, state, qf.load(cfg.q0_cfg, q0) >= cfg.max_load)
+
+
+def stats(cfg: CascadeConfig, state):
+    ns = jnp.stack([s.n for s in state.levels])
+    return {
+        "n": state.q0.n + jnp.sum(ns),
+        "q0_load": qf.load(cfg.q0_cfg, state.q0),
+        "level_counts": ns,
+        "nonempty_levels": jnp.sum((ns > 0).astype(jnp.int32)),
+        "overflow": state.q0.overflow
+        | jnp.any(jnp.stack([s.overflow for s in state.levels])),
+        "size_bytes": cfg.size_bytes,
+        **state.io._asdict(),
+    }
+
+
+IMPL = register(
+    FilterImpl(
+        name="cascade",
+        paper_section="§4 (cascade filter: COLA-style QF hierarchy on flash)",
+        cfg_cls=CascadeConfig,
+        make=make,
+        insert=insert,
+        contains=contains,
+        stats=stats,
+        delete=delete,
+        merge=merge,
+        probe=probe,
+    )
+)

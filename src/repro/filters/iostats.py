@@ -1,0 +1,60 @@
+"""Device-side I/O accounting for the functional filter states.
+
+The legacy dataclass filters (``core.buffered_qf``, ``core.cascade_filter``)
+mutate a host-side :class:`repro.core.cost_model.IOLog`, which forces a
+device->host sync on every insert batch.  :class:`IOCounters` keeps the
+same schedule as scalars *inside* the filter state pytree, so a whole
+ingest loop — flush/merge decisions included — runs under one
+``jax.jit``/``jax.lax.scan`` with zero host transfers.  Convert to an
+``IOLog`` (host) only at reporting time via :func:`to_iolog`.
+
+Op counts are int32; byte counters are float32 (int64 is unavailable
+without x64 mode and int32 would overflow at ~2 GB of modeled traffic).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import IOLog
+
+
+class IOCounters(NamedTuple):
+    """Pytree of device scalars mirroring the fields of ``IOLog``."""
+
+    rand_page_reads: jnp.ndarray  # int32
+    rand_page_writes: jnp.ndarray  # int32
+    seq_read_bytes: jnp.ndarray  # float32
+    seq_write_bytes: jnp.ndarray  # float32
+    flushes: jnp.ndarray  # int32
+    merges: jnp.ndarray  # int32
+
+
+def zeros() -> IOCounters:
+    # distinct buffers per field so a donated state never aliases itself
+    return IOCounters(
+        rand_page_reads=jnp.zeros((), jnp.int32),
+        rand_page_writes=jnp.zeros((), jnp.int32),
+        seq_read_bytes=jnp.zeros((), jnp.float32),
+        seq_write_bytes=jnp.zeros((), jnp.float32),
+        flushes=jnp.zeros((), jnp.int32),
+        merges=jnp.zeros((), jnp.int32),
+    )
+
+
+def add(a: IOCounters, b: IOCounters) -> IOCounters:
+    return IOCounters(*(x + y for x, y in zip(a, b)))
+
+
+def to_iolog(io: IOCounters) -> IOLog:
+    """Host-side conversion for benchmarks / reporting (syncs the device)."""
+    return IOLog(
+        rand_page_reads=int(io.rand_page_reads),
+        rand_page_writes=int(io.rand_page_writes),
+        seq_read_bytes=int(io.seq_read_bytes),
+        seq_write_bytes=int(io.seq_write_bytes),
+        flushes=int(io.flushes),
+        merges=int(io.merges),
+    )

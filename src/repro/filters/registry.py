@@ -1,0 +1,86 @@
+"""Filter registry: one functional protocol, many AMQ implementations.
+
+Every implementation registers a :class:`FilterImpl` record binding its
+static config class (a hashable NamedTuple — jit-static) to the
+protocol's operations.  The façade functions in ``repro.filters``
+dispatch on ``type(cfg)``, so call sites hold an opaque ``(cfg, state)``
+pair and never name a concrete filter class.
+
+Protocol (all ops pure; states are pytrees; every op is jittable):
+
+    make(**spec)                  -> (cfg, state)
+    insert(cfg, state, keys, k)   -> state
+    contains(cfg, state, keys)    -> bool[B]
+    delete(cfg, state, keys, k)   -> state          (optional)
+    merge(cfg, state_a, state_b)  -> state          (optional)
+    probe(cfg, state, keys)       -> (state, bool[B])  # contains + I/O accounting
+    stats(cfg, state)             -> dict[str, scalar]
+
+``k`` is an optional valid-prefix count so fixed-shape (padded) batches
+can carry a dynamic number of real keys through ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+
+class FilterImpl(NamedTuple):
+    name: str
+    paper_section: str
+    cfg_cls: type
+    make: Callable  # (**spec) -> (cfg, state)
+    insert: Callable  # (cfg, state, keys, k=None) -> state
+    contains: Callable  # (cfg, state, keys) -> bool[B]
+    stats: Callable  # (cfg, state) -> dict
+    delete: Optional[Callable] = None
+    merge: Optional[Callable] = None
+    probe: Optional[Callable] = None  # (cfg, state, keys) -> (state, bool[B])
+    # config-dependent capability (e.g. bloom deletes only when counting);
+    # None means "delete works for every cfg of this type"
+    can_delete: Optional[Callable] = None  # (cfg) -> bool
+
+    def deletable(self, cfg=None) -> bool:
+        if self.delete is None:
+            return False
+        if cfg is None or self.can_delete is None:
+            return True
+        return bool(self.can_delete(cfg))
+
+    @property
+    def supports_merge(self) -> bool:
+        return self.merge is not None
+
+
+_BY_NAME: dict[str, FilterImpl] = {}
+_BY_CFG: dict[type, FilterImpl] = {}
+
+
+def register(impl: FilterImpl) -> FilterImpl:
+    if impl.name in _BY_NAME:
+        raise ValueError(f"filter {impl.name!r} already registered")
+    _BY_NAME[impl.name] = impl
+    _BY_CFG[impl.cfg_cls] = impl
+    return impl
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_BY_NAME))
+
+
+def by_name(name: str) -> FilterImpl:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown filter {name!r}; registered: {', '.join(names())}"
+        ) from None
+
+
+def by_cfg(cfg) -> FilterImpl:
+    try:
+        return _BY_CFG[type(cfg)]
+    except KeyError:
+        raise TypeError(
+            f"{type(cfg).__name__} is not a registered filter config"
+        ) from None

@@ -1,0 +1,131 @@
+"""Mesh-sharded quotient filter under the functional protocol (paper §6).
+
+Adapter over :mod:`repro.core.sharded_filter`: the state is the stacked
+per-shard QF pytree, and insert/contains route keys to their owner
+shard with the MoE-dispatch all_to_all schedule.  The shard_map'd step
+functions are built lazily per (cfg, batch) and cached — the mesh is
+derived from the visible devices (``n_shards`` must divide the device
+count; ``n_shards=1`` works on a single host).
+
+``delete`` is not registered: a deletion would need the same routed
+dispatch plus per-shard multiset diffs, which the core module does not
+expose yet.  ``merge`` is the per-shard pairwise QF merge (shard s owns
+the same quotient range in both inputs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from repro.core import sharded_filter as sf
+
+from .registry import FilterImpl, register
+
+
+class ShardedQFilterConfig(NamedTuple):
+    q: int  # global log2 buckets
+    r: int
+    n_shards: int = 1
+    axis: str = "data"
+    seed: int = 0
+    capacity_factor: float = 2.0
+
+    @property
+    def core(self) -> sf.ShardedQFConfig:
+        return sf.ShardedQFConfig(
+            q=self.q, r=self.r, n_shards=self.n_shards, axis=self.axis,
+            seed=self.seed, capacity_factor=self.capacity_factor,
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh(n_shards: int, axis: str):
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh((n_shards,), (axis,))
+    # jax < 0.4.35
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_utils.create_device_mesh((n_shards,)), (axis,))
+
+
+@functools.lru_cache(maxsize=None)
+def _insert_fn(cfg: ShardedQFilterConfig, batch: int):
+    core = cfg.core
+    return jax.jit(sf.make_insert(core, _mesh(cfg.n_shards, cfg.axis), batch))
+
+
+@functools.lru_cache(maxsize=None)
+def _lookup_fn(cfg: ShardedQFilterConfig, batch: int):
+    core = cfg.core
+    return jax.jit(sf.make_lookup(core, _mesh(cfg.n_shards, cfg.axis), batch))
+
+
+def _pad_batch(cfg, keys):
+    """Pad to a multiple of n_shards (all_to_all needs equal splits)."""
+    pad = (-keys.shape[0]) % cfg.n_shards
+    if pad:
+        keys = jnp.concatenate([keys, keys[:1].repeat(pad)])
+    return keys, pad
+
+
+def make(**spec):
+    cfg = ShardedQFilterConfig(**spec)
+    if cfg.n_shards & (cfg.n_shards - 1):
+        raise ValueError("n_shards must be a power of two")
+    if len(jax.devices()) % cfg.n_shards:
+        raise ValueError(
+            f"n_shards={cfg.n_shards} does not divide {len(jax.devices())} devices"
+        )
+    return cfg, sf.empty(cfg.core)
+
+
+def insert(cfg: ShardedQFilterConfig, state, keys, k=None):
+    if k is not None:
+        raise NotImplementedError("sharded_qf insert does not take a valid count")
+    if keys.shape[0] % cfg.n_shards:
+        # padding would insert duplicate fingerprints (QF is a multiset)
+        raise ValueError(
+            f"insert batch ({keys.shape[0]}) must be a multiple of n_shards"
+        )
+    return _insert_fn(cfg, keys.shape[0])(state, keys)
+
+
+def contains(cfg: ShardedQFilterConfig, state, keys):
+    keys, pad = _pad_batch(cfg, keys)
+    hit = _lookup_fn(cfg, keys.shape[0])(state, keys)
+    return hit[: hit.shape[0] - pad] if pad else hit
+
+
+def merge(cfg: ShardedQFilterConfig, sa, sb):
+    local = cfg.core.local_cfg
+    return jax.vmap(lambda a, b: qf.merge(local, local, local, a, b))(sa, sb)
+
+
+def stats(cfg: ShardedQFilterConfig, state):
+    return {
+        "n": jnp.sum(state.n),
+        "shard_counts": state.n,
+        "load": jnp.sum(state.n).astype(jnp.float32) / (1 << cfg.q),
+        "overflow": jnp.any(state.overflow),
+        "size_bytes": cfg.n_shards * cfg.core.local_cfg.size_bytes,
+    }
+
+
+IMPL = register(
+    FilterImpl(
+        name="sharded_qf",
+        paper_section="§6 (future work: multi-device AMQ, quotient-prefix sharded)",
+        cfg_cls=ShardedQFilterConfig,
+        make=make,
+        insert=insert,
+        contains=contains,
+        stats=stats,
+        merge=merge,
+    )
+)

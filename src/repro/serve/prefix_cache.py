@@ -1,10 +1,11 @@
 """AMQ-fronted prefix cache (the paper's Webtable pattern, serving-side).
 
-A quotient filter answers "might this prompt prefix be cached?" before
-any remote KV-store lookup.  False positives cost one wasted remote
-probe at rate ~2^-r; false negatives never happen, so a hit answer of
-False skips the round trip safely.  Deletion support (QF, not BF!)
-matters here: evicted prefixes are removed from the filter.
+A quotient filter — held as a ``repro.filters`` ``(cfg, state)`` pair —
+answers "might this prompt prefix be cached?" before any remote
+KV-store lookup.  False positives cost one wasted remote probe at rate
+~2^-r; false negatives never happen, so a hit answer of False skips the
+round trip safely.  Deletion support (QF, not BF!) matters here:
+evicted prefixes are removed from the filter.
 """
 
 from __future__ import annotations
@@ -12,14 +13,18 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import quotient_filter as qf
+from repro import filters
 from repro.core.fingerprint import fold_bytes
 
 
 class PrefixCacheFilter:
-    def __init__(self, q: int = 16, r: int = 14, seed: int = 0):
-        self.cfg = qf.QFConfig(q=q, r=r, seed=seed)
-        self.state = qf.empty(self.cfg)
+    """Host-facing wrapper holding one functional QF ``(cfg, state)``."""
+
+    def __init__(self, q: int = 16, r: int = 14, seed: int = 0,
+                 backend: str = "reference"):
+        self.cfg, self.state = filters.make(
+            "qf", q=q, r=r, seed=seed, backend=backend
+        )
 
     @staticmethod
     def _digest(prompts: np.ndarray) -> jnp.ndarray:
@@ -31,7 +36,7 @@ class PrefixCacheFilter:
     def check_and_insert(self, prompts: np.ndarray) -> np.ndarray:
         """Membership for each prompt; then insert the misses."""
         keys = self._digest(prompts)
-        hit = np.array(qf.contains(self.cfg, self.state, keys))
+        hit = np.array(filters.contains(self.cfg, self.state, keys))
         # intra-batch duplicates: mark later copies as hits
         seen: dict[int, int] = {}
         for i, k in enumerate(np.asarray(keys)):
@@ -40,13 +45,13 @@ class PrefixCacheFilter:
             seen[int(k)] = i
         misses = keys[jnp.asarray(~hit)]
         if misses.shape[0]:
-            self.state = qf.insert(self.cfg, self.state, misses)
+            self.state = filters.insert(self.cfg, self.state, misses)
         return hit
 
     def evict(self, prompts: np.ndarray) -> None:
         keys = self._digest(prompts)
-        self.state = qf.delete(self.cfg, self.state, keys)
+        self.state = filters.delete(self.cfg, self.state, keys)
 
     @property
     def load(self) -> float:
-        return float(qf.load(self.cfg, self.state))
+        return float(filters.stats(self.cfg, self.state)["load"])

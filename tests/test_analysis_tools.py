@@ -24,8 +24,10 @@ class TestHloAnalysis:
         want = 2 * 10 * 64 * 128 * 128
         assert abs(got - want) / want < 0.01
         # raw xla under-counts by ~the trip count (regression canary)
-        raw = c.cost_analysis()["flops"]
-        assert raw < want / 5
+        raw = c.cost_analysis()
+        if isinstance(raw, (list, tuple)):  # jax<=0.4 returns one dict per program
+            raw = raw[0]
+        assert raw["flops"] < want / 5
 
     def test_grad_remat_flops(self):
         def f(x, w):

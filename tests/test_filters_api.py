@@ -1,0 +1,229 @@
+"""Conformance suite for the unified ``repro.filters`` protocol.
+
+Every registered filter type runs the same insert / contains / delete /
+merge invariants through the façade — call sites never touch a concrete
+class.  The scan tests assert the tentpole property: a buffered-QF or
+cascade ingest loop compiles into one ``jax.jit``/``lax.scan`` with
+donated state and **zero** host transfers (``jax.transfer_guard``).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import filters
+
+# name -> (registry name, spec); keys chosen so every structure sits at a
+# sane load after N inserts and the QF-family fp rate is ~2^-10 or better
+CASES = {
+    "qf": ("qf", dict(q=11, r=10)),
+    "qf_pallas": ("qf", dict(q=11, r=10, backend="pallas")),
+    "bloom": ("bloom", dict(m_bits=1 << 16, k=6, counting=True)),
+    "blocked_bloom": (
+        "blocked_bloom",
+        dict(m_bits=1 << 16, k=6, block_bits=1 << 12, counting=True),
+    ),
+    "buffered_qf": ("buffered_qf", dict(ram_q=8, disk_q=12, p=24)),
+    "buffered_qf_pallas": (
+        "buffered_qf",
+        dict(ram_q=8, disk_q=12, p=24, backend="pallas"),
+    ),
+    "cascade": ("cascade", dict(ram_q=8, p=26, fanout=2, levels=3)),
+    "sharded_qf": ("sharded_qf", dict(q=12, r=10, n_shards=1)),
+}
+
+N = 1024
+CHUNK = 128  # buffered structures must ingest below their RAM capacity
+
+
+def _keys(seed, n=N, lo=0, hi=2**31):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+def _mk(case):
+    name, spec = CASES[case]
+    return filters.make(name, **spec)
+
+
+def _fill(cfg, state, keys):
+    for i in range(0, keys.shape[0], CHUNK):
+        state = filters.insert(cfg, state, keys[i : i + CHUNK])
+    return state
+
+
+@pytest.fixture(params=sorted(CASES), name="case")
+def _case(request):
+    return request.param
+
+
+def test_registry_covers_every_name():
+    assert set(filters.names()) == {name for name, _ in CASES.values()}
+    for name, _ in CASES.values():
+        impl = filters.by_name(name)
+        assert impl.paper_section.startswith("§")
+
+
+class TestConformance:
+    def test_no_false_negatives(self, case):
+        cfg, st = _mk(case)
+        keys = _keys(1)
+        st = _fill(cfg, st, keys)
+        assert bool(filters.contains(cfg, st, keys).all())
+
+    def test_fp_rate_bounded(self, case):
+        cfg, st = _mk(case)
+        st = _fill(cfg, st, _keys(2))
+        absent = _keys(3, n=8192, lo=2**31, hi=2**32)
+        assert float(filters.contains(cfg, st, absent).mean()) < 0.01
+
+    def test_empty_contains_nothing(self, case):
+        cfg, st = _mk(case)
+        assert not bool(filters.contains(cfg, st, _keys(4, n=256)).any())
+
+    def test_insert_valid_count_ignores_padding(self, case):
+        cfg, st = _mk(case)
+        keys = _keys(5, n=CHUNK)
+        name = CASES[case][0]
+        if name == "sharded_qf":
+            with pytest.raises(NotImplementedError):
+                filters.insert(cfg, st, keys, k=CHUNK // 2)
+            return
+        st = filters.insert(cfg, st, keys, k=CHUNK // 2)
+        assert bool(filters.contains(cfg, st, keys[: CHUNK // 2]).all())
+        s = filters.stats(cfg, st)
+        if "n" in s:  # counted structures: padding must not inflate n
+            assert int(s["n"]) == CHUNK // 2
+
+    def test_delete_removes_one_copy(self, case):
+        cfg, st = _mk(case)
+        if not filters.supports(cfg, "delete"):
+            pytest.skip(f"{CASES[case][0]} does not register delete")
+        keys = _keys(6)
+        st = _fill(cfg, st, keys)
+        st = filters.delete(cfg, st, keys[: N // 2])
+        # the untouched half must still be present (no false negatives)
+        assert bool(filters.contains(cfg, st, keys[N // 2 :]).all())
+        s = filters.stats(cfg, st)
+        if "n" in s:
+            assert int(s["n"]) == N // 2
+
+    def test_layered_delete_spills_duplicate_copies(self):
+        """Deleting more copies of a key than the top structure holds
+        must remove the remainder from the structures below (regression:
+        both batch occurrences used to target the RAM/Q0 copy)."""
+        from repro.filters import buffered as fb
+
+        key = jnp.asarray([42, 42], jnp.uint32)
+        # buffered: one copy on disk (flushed), one in RAM
+        cfg, st = filters.make("buffered_qf", ram_q=8, disk_q=12, p=24)
+        st = filters.insert(cfg, st, key[:1])
+        st = fb.flush(cfg, st)
+        st = filters.insert(cfg, st, key[:1])
+        assert int(filters.stats(cfg, st)["n"]) == 2
+        st = filters.delete(cfg, st, key)
+        assert int(filters.stats(cfg, st)["n"]) == 0
+        assert not bool(filters.contains(cfg, st, key[:1]).any())
+        # cascade: one copy collapsed to a level, one in Q0
+        ccfg, cst = filters.make("cascade", ram_q=8, p=26, fanout=2, levels=3)
+        cst = filters.insert(ccfg, cst, _keys(20, n=256))  # force a collapse
+        cst = filters.insert(ccfg, cst, key[:1])
+        before = int(filters.stats(ccfg, cst)["n"])
+        cst = filters.insert(ccfg, cst, key[:1])
+        cst = filters.delete(ccfg, cst, key)
+        assert int(filters.stats(ccfg, cst)["n"]) == before - 1
+        assert not bool(filters.contains(ccfg, cst, key[:1]).any())
+
+    def test_supports_is_config_exact(self):
+        plain, _ = filters.make("bloom", m_bits=1 << 12, k=4)
+        counting, _ = filters.make("bloom", m_bits=1 << 12, k=4, counting=True)
+        assert filters.supports("bloom", "delete")  # the family can
+        assert not filters.supports(plain, "delete")  # this config can't
+        assert filters.supports(counting, "delete")
+        with pytest.raises(NotImplementedError):
+            filters.delete(plain, filters.make("bloom", m_bits=1 << 12, k=4)[1],
+                           jnp.arange(4, dtype=jnp.uint32))
+
+    def test_merge_is_union(self, case):
+        cfg, sa = _mk(case)
+        if not filters.supports(cfg, "merge"):
+            pytest.skip(f"{CASES[case][0]} does not register merge")
+        _, sb = _mk(case)
+        ka, kb = _keys(7), _keys(8, lo=2**30, hi=2**31)
+        sa = _fill(cfg, sa, ka)
+        sb = _fill(cfg, sb, kb)
+        merged = filters.merge(cfg, sa, sb)
+        assert bool(filters.contains(cfg, merged, ka).all())
+        assert bool(filters.contains(cfg, merged, kb).all())
+        s = filters.stats(cfg, merged)
+        if "overflow" in s:
+            assert not bool(s["overflow"])
+
+    def test_stats_are_device_values(self, case):
+        cfg, st = _mk(case)
+        st = filters.insert(cfg, st, _keys(9, n=CHUNK))
+        s = filters.stats(cfg, st)
+        assert isinstance(s, dict) and s
+        for v in s.values():
+            assert isinstance(v, (jnp.ndarray, jax.Array, int, float))
+
+
+class TestScannedIngest:
+    """The tentpole acceptance: whole ingest loops under one jit + scan,
+    flush/merge decisions on device, zero host transfers."""
+
+    @pytest.mark.parametrize(
+        "name,spec",
+        [
+            ("buffered_qf", dict(ram_q=8, disk_q=12, p=24)),
+            ("cascade", dict(ram_q=8, p=26, fanout=2, levels=3)),
+        ],
+    )
+    def test_scan_ingest_zero_host_syncs(self, name, spec):
+        cfg, st = filters.make(name, **spec)
+        batches = _keys(10, n=16 * CHUNK).reshape(16, CHUNK)
+
+        def step(s, ks):
+            return filters.insert(cfg, s, ks), None
+
+        # 1) the step traces: a single scan, no concretization anywhere
+        jaxpr = jax.make_jaxpr(lambda s, bs: jax.lax.scan(step, s, bs)[0])(
+            st, batches
+        )
+        assert [e.primitive.name for e in jaxpr.jaxpr.eqns] == ["scan"]
+
+        # 2) it executes with donated state and no device->host transfer
+        ingest = jax.jit(
+            lambda s, bs: jax.lax.scan(step, s, bs)[0], donate_argnums=0
+        )
+        st_dev = jax.device_put(st)
+        b_dev = jax.device_put(batches)
+        with jax.transfer_guard("disallow"):
+            out = ingest(st_dev, b_dev)
+
+        s = filters.stats(cfg, out)
+        assert int(s["n"]) == batches.size
+        assert int(s["flushes"]) > 0  # the cond/switch actually fired on device
+        assert not bool(s["overflow"])
+        assert bool(filters.contains(cfg, out, batches.reshape(-1)).all())
+
+    def test_probe_accounts_page_reads_on_device(self):
+        cfg, st = filters.make("buffered_qf", ram_q=8, disk_q=12, p=24)
+        keys = _keys(11, n=512)
+        st = _fill(cfg, st, keys)
+        cfgc, stc = filters.make("cascade", ram_q=8, p=26, fanout=2, levels=3)
+        stc = _fill(cfgc, stc, keys)
+        for c, s0 in ((cfg, st), (cfgc, stc)):
+            before = int(s0.io.rand_page_reads)
+            s1, hit = filters.probe(c, s0, keys[:100])
+            assert bool(hit.all())
+            assert int(s1.io.rand_page_reads) >= before  # counted on device
+
+    def test_probe_is_jittable(self):
+        cfg, st = filters.make("buffered_qf", ram_q=8, disk_q=12, p=24)
+        st = _fill(cfg, st, _keys(12, n=512))
+        probe = jax.jit(lambda s, ks: filters.probe(cfg, s, ks))
+        st2, hit = probe(st, _keys(12, n=512))
+        assert bool(hit.all())
+        assert int(st2.io.rand_page_reads) > 0

@@ -5,6 +5,7 @@ structures — no tolerance needed) against ref.py and repro.core.
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -39,7 +40,7 @@ def test_build_kernel_matches_ref_oracle():
     fq, fr = qf.fingerprints(cfg, keys)
     fq, fr = qf._pad_sort(fq, fr, jnp.ones(fq.shape, bool))
     idx = jnp.arange(fq.shape[0], dtype=jnp.int32)
-    pos = idx + jnp.maximum.accumulate(fq - idx)
+    pos = idx + jax.lax.cummax(fq - idx)
     con_b = (idx > 0) & (fq == jnp.roll(fq, 1)) & (fq < 2**30)
     shf_b = (pos != fq) & (fq < 2**30)
     spos = jnp.where(fq < 2**30, pos, jnp.int32(2**31 - 1))

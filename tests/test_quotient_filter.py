@@ -3,7 +3,27 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests degrade to skips without hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # inert decorator stand-ins so the module imports
+        return lambda f: f
+
+    settings = given
+
+    class _Anything:
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _Anything()
 
 from repro.core import quotient_filter as qf
 
@@ -165,6 +185,7 @@ class TestMergeResize:
         assert bool(qf.contains(out_cfg, merged, jnp.concatenate(all_keys)).all())
 
 
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="property tests need hypothesis")
 class TestProperties:
     @settings(max_examples=25, deadline=None)
     @given(
