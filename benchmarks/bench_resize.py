@@ -1,0 +1,140 @@
+"""Paper §3 "Resizing": what dynamic growth actually costs.
+
+Three questions, three sections:
+
+* ``resize_double_*`` — one in-place doubling (requotient + rebuild,
+  the paper's borrow-a-bit resize) vs ``resize_rebuild_*``, the naive
+  alternative of building a fresh filter at the doubled size and
+  re-inserting every key.  The doubling is one streaming pass over the
+  table and never touches the original keys; the rebuild needs the key
+  set (which an AMQ normally no longer has) and re-hashes all of it.
+  Both backends: the doubling's rebuild pass routes through the Pallas
+  ``qf_build_planes`` kernel under ``backend="pallas"``.
+* ``resize_schedule_step*`` — growth-schedule sweep: ingest 8x the
+  initial capacity through ``filters.auto_grow`` where each structural
+  step adds 1, 2, or 3 quotient bits (2x / 4x / 8x capacity).  Fewer,
+  bigger steps re-stream the table fewer times; the derived column
+  carries the total structural steps and the modeled bytes streamed.
+* ``resize_grow_{buffered_qf,cascade}`` — one growth step of the
+  layered structures: buffered re-streams its disk QF; the cascade
+  deepens for free (the new level starts empty).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro import filters
+from repro.core import quotient_filter as qf
+
+from .common import Row, keys_u32, time_fn
+
+Q0 = 12  # starting quotient bits for the flat-QF sections
+P = 28  # fingerprint bits
+
+
+def _filled_qf(rng, q: int, backend: str):
+    cfg, st = filters.make("qf", q=q, r=P - q, backend=backend)
+    keys = keys_u32(rng, cfg.core.capacity)
+    st = filters.insert(cfg, st, keys)
+    return cfg, jax.block_until_ready(st), keys
+
+
+def _doubling_vs_rebuild(rng) -> list[Row]:
+    rows = []
+    for backend in ("reference", "pallas"):
+        cfg, st, keys = _filled_qf(rng, Q0, backend)
+
+        def double():
+            _, out = filters.resize(cfg, st, new_q=cfg.q + 1)
+            return out
+
+        t_double = time_fn(double)
+
+        big_cfg, _ = filters.make("qf", q=Q0 + 1, r=P - Q0 - 1, backend=backend)
+
+        def rebuild():
+            _, empty = filters.make("qf", q=Q0 + 1, r=P - Q0 - 1, backend=backend)
+            return filters.insert(big_cfg, empty, keys)
+
+        t_rebuild = time_fn(rebuild)
+        tag = f"q{Q0}_{backend}"
+        rows.append(
+            Row(
+                f"resize_double_{tag}",
+                t_double * 1e6,
+                f"streamed_bytes={2 * cfg.core.size_bytes}",
+            )
+        )
+        rows.append(
+            Row(
+                f"resize_rebuild_{tag}",
+                t_rebuild * 1e6,
+                f"double/rebuild={t_double / t_rebuild:.2f}x",
+            )
+        )
+    return rows
+
+
+def _growth_schedules(rng) -> list[Row]:
+    """Ingest 8x the initial capacity with different per-step growth."""
+    rows = []
+    n_total = 8 * qf.QFConfig(q=Q0, r=P - Q0).capacity
+    all_keys = keys_u32(rng, n_total)
+    chunk = 512
+    for step_bits in (1, 2, 3):
+        cfg, st = filters.make("qf", q=Q0, r=P - Q0)
+        steps, streamed = 0, 0.0
+        t0 = __import__("time").perf_counter()
+        for i in range(0, n_total, chunk):
+            st = filters.insert(cfg, st, all_keys[i : i + chunk])
+            if bool(filters.needs_resize(cfg, st)):
+                streamed += cfg.core.size_bytes  # stream old table in
+                cfg, st = filters.resize(cfg, st, new_q=cfg.q + step_bits)
+                streamed += cfg.core.size_bytes  # new table out
+                steps += 1
+        jax.block_until_ready(st)
+        elapsed = __import__("time").perf_counter() - t0
+        assert not bool(filters.stats(cfg, st)["overflow"])
+        rows.append(
+            Row(
+                f"resize_schedule_step{step_bits}",
+                elapsed / n_total * 1e6,
+                f"final_q={cfg.q};grow_steps={steps};streamed_bytes={streamed:.0f}",
+            )
+        )
+    return rows
+
+
+def _layered_growth(rng) -> list[Row]:
+    rows = []
+    cfg, st = filters.make("buffered_qf", ram_q=8, disk_q=Q0, p=P)
+    keys = keys_u32(rng, cfg.disk.capacity)
+    for i in range(0, keys.shape[0], 128):
+        st = filters.insert(cfg, st, keys[i : i + 128])
+    jax.block_until_ready(st)
+    t = time_fn(lambda: filters.grow(cfg, st)[1])
+    rows.append(
+        Row(
+            "resize_grow_buffered_qf",
+            t * 1e6,
+            f"disk_q={cfg.disk_q}->{cfg.disk_q + 1}",
+        )
+    )
+
+    ccfg, cst = filters.make("cascade", ram_q=8, p=P, fanout=2, levels=3)
+    ckeys = keys_u32(rng, 2048)
+    for i in range(0, 2048, 128):
+        cst = filters.insert(ccfg, cst, ckeys[i : i + 128])
+    jax.block_until_ready(cst)
+    t = time_fn(lambda: filters.grow(ccfg, cst)[1])
+    rows.append(
+        Row("resize_grow_cascade", t * 1e6, f"levels={ccfg.levels}->{ccfg.levels + 1}")
+    )
+    return rows
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(42)
+    return _doubling_vs_rebuild(rng) + _growth_schedules(rng) + _layered_growth(rng)

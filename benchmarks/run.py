@@ -2,7 +2,9 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
 Prints ``name,us_per_call,derived`` CSV rows (per the scaffold contract)
-and writes experiments/bench_results.csv.
+and writes experiments/bench_results.csv incrementally — rows are
+appended and flushed as each module finishes, so one crashing bench
+cannot lose the rows of the modules that already completed.
 """
 
 from __future__ import annotations
@@ -20,8 +22,11 @@ MODULES = [
     "bench_clusters",   # Fig 4
     "bench_occupancy",  # Fig 6
     "bench_fanout",     # Fig 9 / §5.3
+    "bench_resize",     # §3 resizing: doubling vs rebuild + growth schedules
     "bench_kernels",    # Pallas kernels (interpret)
 ]
+
+OUT_PATH = os.path.join("experiments", "bench_results.csv")
 
 
 def main() -> None:
@@ -31,23 +36,22 @@ def main() -> None:
 
     import importlib
 
-    all_rows = []
-    print("name,us_per_call,derived")
-    for modname in MODULES:
-        if args.only and args.only not in modname:
-            continue
-        t0 = time.time()
-        mod = importlib.import_module(f"benchmarks.{modname}")
-        rows = mod.run()
-        for r in rows:
-            print(r.csv(), flush=True)
-        all_rows += rows
-        print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.csv", "w") as f:
+    print("name,us_per_call,derived")
+    with open(OUT_PATH, "w") as f:
         f.write("name,us_per_call,derived\n")
-        for r in all_rows:
-            f.write(r.csv() + "\n")
+        f.flush()
+        for modname in MODULES:
+            if args.only and args.only not in modname:
+                continue
+            t0 = time.time()
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            rows = mod.run()
+            for r in rows:
+                print(r.csv(), flush=True)
+                f.write(r.csv() + "\n")
+            f.flush()
+            print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

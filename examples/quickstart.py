@@ -69,6 +69,19 @@ def main():
     print("pallas backend membership:",
           bool(filters.contains(kcfg, kst, keys[:10_000]).all()))
 
+    # 5. Dynamic resizing (paper §3, the QF's headline edge over Blooms):
+    #    start deliberately tiny and let auto_grow double the table in
+    #    place whenever the load crosses the operating point.
+    gcfg, gst = filters.make("qf", q=10, r=18)
+    for i in range(0, 50_000, 1_000):
+        gcfg, gst = filters.auto_grow(gcfg, gst, keys[i : i + 1_000])
+    gs = filters.stats(gcfg, gst)
+    print("auto_grow: q 10 ->", gcfg.q,
+          "| n:", int(gs["n"]),
+          "| load:", round(float(gs["load"]), 2),
+          "| overflow:", bool(gs["overflow"]),
+          "| all present:", bool(filters.contains(gcfg, gst, keys).all()))
+
 
 if __name__ == "__main__":
     main()

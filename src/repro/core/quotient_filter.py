@@ -145,7 +145,9 @@ def build_sorted(cfg: QFConfig, fq: jnp.ndarray, fr: jnp.ndarray, n) -> QFState:
 
     # Linear-probe positions: pos[i] = max(pos[i-1] + 1, fq[i])
     #                                = i + cummax(fq[i] - i)          (scan)
-    pos = idx + jax.lax.cummax(jnp.where(valid, fq, -INT32_MAX) - idx)
+    # The padding sentinel must stay out of the subtraction: -INT32_MAX - idx
+    # wraps for idx >= 2, so the difference is formed for valid rows only.
+    pos = idx + jax.lax.cummax(jnp.where(valid, fq - idx, -INT32_MAX))
     overflow = jnp.any(valid & (pos >= t))
     spos = jnp.where(valid, pos, INT32_MAX)  # scatter-drop for padding
 
@@ -441,15 +443,20 @@ def _requotient(fq, fr, cfg_in: QFConfig, cfg_out: QFConfig):
     return fq2, fr2
 
 
-def multi_merge(cfg_out: QFConfig, parts) -> QFState:
+def multi_merge(cfg_out: QFConfig, parts, build=None) -> QFState:
     """Merge any number of (cfg, state) QFs into one output QF.
 
     One decode pass per input + one sort + one build — the k-way
     analogue of the paper's merge, used by the cascade filter when it
-    collapses levels Q_0..Q_i into Q_i' (paper §4, Fig. 5).
+    collapses levels Q_0..Q_i into Q_i' (paper §4, Fig. 5).  ``build``
+    swaps the bandwidth-bound rebuild pass (default :func:`build_sorted`;
+    the Pallas kernel path passes ``kernels.ops.build_sorted``).
     """
+    if build is None:
+        build = build_sorted
     p_out = cfg_out.q + cfg_out.r
     qs_all, rs_all, valid_all, n_total = [], [], [], jnp.zeros((), jnp.int32)
+    overflow = jnp.zeros((), jnp.bool_)
     for cfg, state in parts:
         if cfg.q + cfg.r != p_out:
             raise ValueError("multi_merge requires equal fingerprint width")
@@ -459,16 +466,30 @@ def multi_merge(cfg_out: QFConfig, parts) -> QFState:
         rs_all.append(fr)
         valid_all.append(jnp.arange(fq.shape[0]) < n)
         n_total = n_total + n
+        overflow = overflow | state.overflow
     allq = jnp.concatenate(qs_all)
     allr = jnp.concatenate(rs_all)
     valid = jnp.concatenate(valid_all)
     allq, allr = _pad_sort(allq, allr, valid)
-    return build_sorted(cfg_out, allq, allr, n_total)
+    out = build(cfg_out, allq, allr, n_total)
+    # an input whose slack had overflowed may already have lost entries;
+    # the union must keep reporting that (as qf.merge does)
+    return out._replace(overflow=out.overflow | overflow)
 
 
-def resize(cfg: QFConfig, state: QFState, new_q: int) -> tuple[QFConfig, QFState]:
+def resize(
+    cfg: QFConfig, state: QFState, new_q: int, build=None
+) -> tuple[QFConfig, QFState]:
     """Dynamically resize (paper §3 'Resizing'): borrow/steal one or more
-    bits between remainder and quotient, preserving all fingerprints."""
+    bits between remainder and quotient, preserving all fingerprints.
+
+    A host-level structural op — the slot-plane shapes change — but the
+    requotient + rebuild body is one streaming device pass.  ``build``
+    swaps the rebuild pass (reference vs Pallas kernel), as in
+    :func:`multi_merge`.
+    """
+    if build is None:
+        build = build_sorted
     new_cfg = cfg._replace(q=new_q, r=cfg.q + cfg.r - new_q)
     qs, rs, n = extract(cfg, state)
     qs, rs = _requotient(qs, rs, cfg, new_cfg)
@@ -480,7 +501,8 @@ def resize(cfg: QFConfig, state: QFState, new_q: int) -> tuple[QFConfig, QFState
         # shrinking: all valid entries must fit; sort pushes pads last
         qs, rs = _pad_sort(qs, rs, jnp.arange(qs.shape[0]) < n)
         qs, rs = qs[: new_cfg.total_slots], rs[: new_cfg.total_slots]
-    return new_cfg, build_sorted(new_cfg, qs, rs, n)
+    new = build(new_cfg, qs, rs, n)
+    return new_cfg, new._replace(overflow=new.overflow | state.overflow)
 
 
 # ---------------------------------------------------------------------------

@@ -94,7 +94,11 @@ class DedupPipeline:
         Also dedups within the incoming batch itself (first occurrence
         wins), exactly like a streaming crawler would.  The insert uses
         a fixed-shape padded batch with a valid count, so the jitted
-        filter step compiles once per docs_per_step."""
+        filter step compiles once per docs_per_step.  Ingest goes
+        through ``filters.auto_grow``: when the cascade's bottom level
+        approaches saturation the level stack deepens in place, so the
+        pipeline never has to size the dedup filter for the corpus up
+        front (``dedup_levels`` is just the starting depth)."""
         keys = jnp.asarray(doc_ids, jnp.uint32)
         seen = np.asarray(filters.contains(self.filter_cfg, self.filter_state, keys))
         _, first_idx = np.unique(doc_ids, return_index=True)
@@ -105,7 +109,7 @@ class DedupPipeline:
             kept = doc_ids[keep]
             padded = np.zeros(len(doc_ids), np.uint32)
             padded[: len(kept)] = kept
-            self.filter_state = filters.insert(
+            self.filter_cfg, self.filter_state = filters.auto_grow(
                 self.filter_cfg,
                 self.filter_state,
                 jnp.asarray(padded),
@@ -146,12 +150,18 @@ class DedupPipeline:
     # -- checkpointable state ------------------------------------------------
 
     def snapshot(self) -> dict:
-        """Filter state is one pytree: flatten to np leaves (pickles cleanly)."""
+        """Filter state is one pytree: flatten to np leaves (pickles cleanly).
+
+        The filter config rides along (as a plain tuple) because
+        ``auto_grow`` may have deepened the cascade since construction —
+        a restore must rebuild the grown geometry, not the configured
+        starting one."""
         leaves = jax.tree_util.tree_leaves(self.filter_state)
         return {
             "docs_seen": self.state.docs_seen,
             "docs_kept": self.state.docs_kept,
             "docs_dropped": self.state.docs_dropped,
+            "filter_cfg": tuple(self.filter_cfg),
             "filter_leaves": [np.asarray(l) for l in leaves],
         }
 
@@ -159,6 +169,12 @@ class DedupPipeline:
         self.state.docs_seen = int(snap["docs_seen"])
         self.state.docs_kept = int(snap["docs_kept"])
         self.state.docs_dropped = int(snap["docs_dropped"])
+        spec = snap.get("filter_cfg")
+        if spec is not None and tuple(spec) != tuple(self.filter_cfg):
+            cfg = type(self.filter_cfg)(*spec)
+            self.filter_cfg, self.filter_state = filters.make(
+                "cascade", **cfg._asdict()
+            )
         cur = jax.tree_util.tree_leaves(self.filter_state)
         new = snap["filter_leaves"]
         if len(cur) != len(new) or any(

@@ -40,6 +40,13 @@ Quickstart::
     step = jax.jit(lambda s, ks: (filters.insert(cfg, s, ks), None))
     state, _ = jax.lax.scan(step, state, key_batches)   # zero host syncs
 
+    # dynamic resizing (the paper's headline QF advantage): a jittable
+    # device predicate plus host-level structural growth, composed by
+    # the ``auto_grow`` ingest driver — start small, never overflow:
+    cfg, state = filters.make("qf", q=10, r=18)
+    for batch in stream:                            # unbounded stream
+        cfg, state = filters.auto_grow(cfg, state, batch)
+
 A ``backend="pallas"`` spec field on the QF-family filters routes the
 bandwidth-bound build/probe passes through the Pallas TPU kernels in
 ``repro.kernels`` (interpret mode on CPU).  ``probe`` is ``contains``
@@ -48,6 +55,8 @@ inside the state; convert with ``repro.filters.iostats.to_iolog``.
 """
 
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from . import bloom_filter, buffered, cascade, iostats, qf_filter, sharded  # noqa: F401 (registration)
 from .iostats import IOCounters, to_iolog
@@ -104,8 +113,89 @@ def stats(cfg, state) -> dict:
     return by_cfg(cfg).stats(cfg, state)
 
 
+def needs_resize(cfg, state):
+    """Device predicate: is the filter at/over its design capacity?
+
+    Jittable (a ``bool[]`` scalar on device) — the cheap half of the
+    resize protocol, safe to evaluate every batch inside a compiled
+    ingest loop.  Filters without a resize binding report a constant
+    False.  The structural ``grow``/``resize`` steps themselves change
+    array shapes and must run on the host (see :func:`auto_grow`).
+    """
+    impl = by_cfg(cfg)
+    if impl.needs_resize is None:
+        return jnp.zeros((), jnp.bool_)
+    return impl.needs_resize(cfg, state)
+
+
+def grow(cfg, state):
+    """One canonical growth step: ``(cfg, state) -> (cfg, state)``.
+
+    Doubles the structure's capacity (QF: steal one remainder bit for
+    the quotient; buffered: disk QF +1 quotient bit, one re-stream;
+    cascade: one deeper level; sharded: +1 bit per shard; bloom: cell
+    doubling).  Host-level — array shapes change — but the data
+    movement is a single streaming device pass.
+    """
+    impl = by_cfg(cfg)
+    if impl.grow is None:
+        raise NotImplementedError(f"{impl.name} does not support grow")
+    return impl.grow(cfg, state)
+
+
+def resize(cfg, state, **kw):
+    """Structural resize with per-family keyword targets:
+    ``resize(cfg, state, new_q=18)`` (qf / sharded_qf),
+    ``resize(cfg, state, disk_q=22)`` (buffered_qf),
+    ``resize(cfg, state, levels=6, fanout=4)`` (cascade),
+    ``resize(cfg, state, factor=4)`` (bloom / blocked_bloom).
+    Returns the new ``(cfg, state)`` pair."""
+    impl = by_cfg(cfg)
+    if impl.resize is None:
+        raise NotImplementedError(f"{impl.name} does not support resize")
+    return impl.resize(cfg, state, **kw)
+
+
+def auto_grow(cfg, state, keys, k=None, max_steps: int = 32):
+    """Insert with automatic growth: the dynamic-resizing ingest driver.
+
+    Checks the device predicate before and after the insert and applies
+    host-level ``grow`` steps until the structure is back under its
+    design load, so an unbounded stream can be ingested through a
+    filter that started at any size — the paper's "a quotient filter
+    can be dynamically resized" property, end-to-end.  Returns the new
+    ``(cfg, state)`` pair; callers must carry both.
+
+    Each ``needs_resize`` evaluation is one device->host sync, so this
+    driver is for host-driven ingest loops (pipelines, serving); fully
+    on-device ``lax.scan`` ingest keeps a static size by construction.
+    Batches should stay comfortably under the structure's slack so a
+    single batch cannot overshoot capacity before the post-insert check
+    runs (the QF-family default slack of 1024 covers typical batches).
+    """
+    impl = by_cfg(cfg)
+    can = impl.needs_resize is not None and impl.grow is not None
+
+    def settle(cfg, state):
+        for _ in range(max_steps):
+            if not bool(impl.needs_resize(cfg, state)):
+                return cfg, state
+            cfg, state = impl.grow(cfg, state)
+        raise RuntimeError(
+            f"{impl.name}: still over capacity after {max_steps} grow steps"
+        )
+
+    if can:
+        cfg, state = settle(cfg, state)
+    state = impl.insert(cfg, state, keys, k)
+    if can:
+        cfg, state = settle(cfg, state)
+    return cfg, state
+
+
 def supports(name_or_cfg, op: str) -> bool:
-    """Does filter ``name_or_cfg`` implement optional op ``"delete"``/``"merge"``?
+    """Does filter ``name_or_cfg`` implement optional op ``"delete"`` /
+    ``"merge"`` / ``"resize"`` / ``"grow"`` / ``"needs_resize"``?
 
     Passing a cfg instance gives the config-exact answer (e.g. delete on
     a plain non-counting Bloom is False); a name answers for the family.
@@ -121,17 +211,21 @@ def supports(name_or_cfg, op: str) -> bool:
 __all__ = [
     "FilterImpl",
     "IOCounters",
+    "auto_grow",
     "by_cfg",
     "by_name",
     "contains",
     "delete",
+    "grow",
     "insert",
     "iostats",
     "make",
     "merge",
     "names",
+    "needs_resize",
     "probe",
     "register",
+    "resize",
     "stats",
     "supports",
     "to_iolog",

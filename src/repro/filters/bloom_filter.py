@@ -9,16 +9,29 @@
   the in-RAM analogue of the paper's buffered Bloom filter [Canim et
   al.].  Slightly worse FP rate, one-page lookups.
 
-States are bare cell arrays — already pytrees, fully jittable: uint8
-for plain bits, uint16 for counting cells (so a key inserted up to 64k
-times or a large merge cannot wrap a counter into a false negative;
-space is *accounted* at the paper's 4 bits per counter regardless).
-As with any counting Bloom filter, deleting a key that was never
-inserted corrupts the shared counters — don't.
+The state is a :class:`BloomState` pytree: the cell array (uint8 bits /
+uint16 counting cells, so a key inserted up to 64k times or a large
+merge cannot wrap a counter into a false negative; space is *accounted*
+at the paper's 4 bits per counter regardless) plus an int32 insert
+count driving the resize predicate.  As with any counting Bloom filter,
+deleting a key that was never inserted corrupts the shared counters —
+don't.
+
+Growth: a Bloom filter cannot be rebuilt at a new size without the
+original keys, but cell-count doubling *is* exact for membership:
+``h mod 2m`` is congruent to ``h mod m`` (mod m), i.e. the new index of
+any old key is its old index or its old index + m — tiling the cell
+array twice therefore preserves every stored key (no false negatives,
+and delete still finds a counter >= the true count).  The old region's
+fill never dilutes, so unlike the QF family the FP rate does not
+recover for old keys; growth buys headroom for *new* keys.  The resize
+predicate is count-based (``n`` vs the classic ``m ln2 / k`` capacity),
+which doubling resets — a fill-based predicate would never clear.
 """
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -59,6 +72,11 @@ class BlockedBloomConfig(NamedTuple):
         return (cells * (4 if self.counting else 1) + 7) // 8
 
 
+class BloomState(NamedTuple):
+    cells: jnp.ndarray  # uint8 bits / uint16 counting cells
+    n: jnp.ndarray  # int32 scalar, number of (valid) keys inserted
+
+
 def _indices(cfg, keys: jnp.ndarray) -> jnp.ndarray:
     """(B, k) cell indices for either config flavor."""
     if isinstance(cfg, BloomFilterConfig):
@@ -78,6 +96,12 @@ def _cells(cfg) -> int:
     return cfg.n_blocks * cfg.block_bits
 
 
+def _count(keys, k) -> jnp.ndarray:
+    return (
+        jnp.int32(keys.shape[0]) if k is None else jnp.asarray(k, jnp.int32)
+    )
+
+
 def _masked(idx: jnp.ndarray, k) -> jnp.ndarray:
     """Route cells of invalid (padding) keys to an out-of-range slot."""
     if k is None:
@@ -90,20 +114,30 @@ def _cell_dtype(cfg):
     return jnp.uint16 if cfg.counting else jnp.uint8
 
 
+def _capacity(cfg) -> int:
+    """Design capacity: n = m ln2 / k keeps the fp rate near 2^-k."""
+    return max(1, int(_cells(cfg) * math.log(2) / cfg.k))
+
+
 def make_impl(cfg_cls, name: str, paper_section: str):
     def make(**spec):
         cfg = cfg_cls(**spec)
-        return cfg, jnp.zeros((_cells(cfg),), _cell_dtype(cfg))
+        return cfg, BloomState(
+            cells=jnp.zeros((_cells(cfg),), _cell_dtype(cfg)),
+            n=jnp.zeros((), jnp.int32),
+        )
 
     def insert(cfg, state, keys, k=None):
         idx = _masked(_indices(cfg, keys), k).reshape(-1)
         if cfg.counting:
-            return state.at[idx].add(jnp.uint16(1), mode="drop")
-        return state.at[idx].max(jnp.uint8(1), mode="drop")
+            cells = state.cells.at[idx].add(jnp.uint16(1), mode="drop")
+        else:
+            cells = state.cells.at[idx].max(jnp.uint8(1), mode="drop")
+        return BloomState(cells=cells, n=state.n + _count(keys, k))
 
     def contains(cfg, state, keys):
         idx = _indices(cfg, keys)
-        return jnp.all(state[idx] > 0, axis=1)
+        return jnp.all(state.cells[idx] > 0, axis=1)
 
     def delete(cfg, state, keys, k=None):
         if not cfg.counting:
@@ -111,17 +145,47 @@ def make_impl(cfg_cls, name: str, paper_section: str):
                 f"{name}: delete requires counting=True (plain bits can't unset)"
             )
         idx = _masked(_indices(cfg, keys), k).reshape(-1)
-        return state.at[idx].add(jnp.uint16(0xFFFF), mode="drop")  # wrapping -1
+        cells = state.cells.at[idx].add(jnp.uint16(0xFFFF), mode="drop")  # wrapping -1
+        return BloomState(cells=cells, n=state.n - _count(keys, k))
 
     def merge(cfg, sa, sb):
         if cfg.counting:
-            return sa + sb
-        return jnp.maximum(sa, sb)
+            cells = sa.cells + sb.cells
+        else:
+            cells = jnp.maximum(sa.cells, sb.cells)
+        return BloomState(cells=cells, n=sa.n + sb.n)
+
+    def needs_resize(cfg, state):
+        return state.n >= jnp.int32(_capacity(cfg))
+
+    def grow(cfg, state):
+        """Double the cell array by tiling it (membership-exact, see
+        module docstring); the config's cell count doubles to match."""
+        if isinstance(cfg, BloomFilterConfig):
+            new_cfg = cfg._replace(m_bits=2 * cfg.m_bits)
+        else:
+            # pin m_bits to the exact cell count so n_blocks doubles even
+            # when the original m_bits was not a multiple of block_bits
+            new_cfg = cfg._replace(m_bits=2 * cfg.n_blocks * cfg.block_bits)
+        return new_cfg, state._replace(
+            cells=jnp.concatenate([state.cells, state.cells])
+        )
+
+    def resize(cfg, state, factor: int = 2):
+        """Grow by a power-of-two factor (shrinking would lose keys)."""
+        if factor < 1 or factor & (factor - 1):
+            raise ValueError("bloom resize factor must be a power of two >= 1")
+        while factor > 1:
+            cfg, state = grow(cfg, state)
+            factor //= 2
+        return cfg, state
 
     def stats(cfg, state):
         return {
-            "cells_set": jnp.sum((state > 0).astype(jnp.int32)),
-            "fill": jnp.mean((state > 0).astype(jnp.float32)),
+            "n": state.n,
+            "cells_set": jnp.sum((state.cells > 0).astype(jnp.int32)),
+            "fill": jnp.mean((state.cells > 0).astype(jnp.float32)),
+            "load": state.n.astype(jnp.float32) / _capacity(cfg),
             "size_bytes": cfg.size_bytes if hasattr(cfg, "size_bytes") else cfg.core.size_bytes,
         }
 
@@ -136,6 +200,9 @@ def make_impl(cfg_cls, name: str, paper_section: str):
             stats=stats,
             delete=delete,
             merge=merge,
+            needs_resize=needs_resize,
+            grow=grow,
+            resize=resize,
             can_delete=lambda cfg: cfg.counting,  # plain bits can't unset
         )
     )

@@ -119,7 +119,12 @@ def delete(cfg: BufferedQFConfig, state, keys, k=None) -> BufferedQFState:
     Duplicate-safe: the j-th batch occurrence of a key targets the j-th
     stored copy across RAM-then-disk, so deleting more copies than the
     RAM QF holds correctly spills the remainder onto the disk QF
-    (fingerprints are consistent across both (q, r) splits)."""
+    (fingerprints are consistent across both (q, r) splits).
+
+    Disk-targeted deletes are charged to ``IOCounters`` under the same
+    schedule as ``probe``: one random page read per targeted key (the
+    cluster must be fetched to locate the copy) and one random page
+    write per copy actually removed."""
     valid = qf_filter.valid_mask(keys, k)
     rq, rr = qf.fingerprints(cfg.ram, keys)
     rank = qf_filter.batch_occurrence_rank(rq, rr, valid)
@@ -128,10 +133,16 @@ def delete(cfg: BufferedQFConfig, state, keys, k=None) -> BufferedQFState:
         cfg.ram, state.ram, rq, rr, valid & (rank < cnt_ram)
     )
     dq, dr = qf.fingerprints(cfg.disk, keys)
-    disk = qf_filter.delete_masked(
-        cfg.disk, state.disk, dq, dr, valid & (rank >= cnt_ram)
+    disk_mask = valid & (rank >= cnt_ram)
+    disk = qf_filter.delete_masked(cfg.disk, state.disk, dq, dr, disk_mask)
+    reads = jnp.where(
+        state.disk.n > 0, jnp.sum(disk_mask, dtype=jnp.int32), jnp.int32(0)
     )
-    return state._replace(ram=ram, disk=disk)
+    io = state.io._replace(
+        rand_page_reads=state.io.rand_page_reads + reads,
+        rand_page_writes=state.io.rand_page_writes + (state.disk.n - disk.n),
+    )
+    return BufferedQFState(ram=ram, disk=disk, io=io)
 
 
 def merge(cfg: BufferedQFConfig, sa, sb) -> BufferedQFState:
@@ -148,6 +159,48 @@ def merge(cfg: BufferedQFConfig, sa, sb) -> BufferedQFState:
         merges=io.merges + 1,
     )
     return BufferedQFState(ram=sa.ram, disk=disk, io=io)
+
+
+def needs_resize(cfg: BufferedQFConfig, state):
+    """Device predicate: the disk QF's (post-flush) load crossed
+    ``max_load`` — the next flush would push it past the paper's
+    operating point."""
+    return qf.load(cfg.disk, state.disk) >= cfg.max_load
+
+
+def _restream(cfg: BufferedQFConfig, new_disk: qf.QFConfig, disk_state):
+    """One streaming requotient pass of the disk QF into a new geometry
+    (Pallas build kernel when backend="pallas")."""
+    return qf.multi_merge(
+        new_disk, [(cfg.disk, disk_state)], build=qf_filter.build_fn(cfg)
+    )
+
+
+def resize(cfg: BufferedQFConfig, state, disk_q: int):
+    """Re-split the disk QF at ``disk_q`` (host-level structural op).
+
+    The whole disk QF is re-streamed once — sequential read of the old
+    structure, sequential write of the new one — which is exactly the
+    paper's merge I/O schedule, charged to ``IOCounters``.
+    """
+    if not (cfg.ram_q < disk_q < cfg.p):
+        raise ValueError(
+            f"disk_q={disk_q} must lie strictly between ram_q={cfg.ram_q} "
+            f"and p={cfg.p}"
+        )
+    new_cfg = cfg._replace(disk_q=disk_q)
+    disk = _restream(cfg, new_cfg.disk, state.disk)
+    io = state.io._replace(
+        seq_read_bytes=state.io.seq_read_bytes + cfg.disk.size_bytes,
+        seq_write_bytes=state.io.seq_write_bytes + new_cfg.disk.size_bytes,
+        resizes=state.io.resizes + 1,
+    )
+    return new_cfg, BufferedQFState(ram=state.ram, disk=disk, io=io)
+
+
+def grow(cfg: BufferedQFConfig, state):
+    """One doubling step of the disk QF (steal one remainder bit)."""
+    return resize(cfg, state, cfg.disk_q + 1)
 
 
 def stats(cfg: BufferedQFConfig, state):
@@ -173,5 +226,8 @@ IMPL = register(
         delete=delete,
         merge=merge,
         probe=probe,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
     )
 )

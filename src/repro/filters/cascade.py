@@ -18,7 +18,11 @@ device arithmetic, so a full ingest loop compiles into one
 ``jax.lax.scan`` with zero host transfers.  If Q0 fills and no level
 fits (undersized ``levels``), Q0 keeps absorbing into its slack and its
 ``overflow`` flag eventually trips — sized like the legacy default
-(``levels >= log_b(n_total / capacity(Q0))``) this never happens.
+(``levels >= log_b(n_total / capacity(Q0))``) this never happens, and
+the depth is no longer a hard ceiling: ``needs_resize`` flags the
+approaching saturation on device and ``grow`` deepens the stack by one
+level (a host-level structural step; the façade's ``auto_grow`` ingest
+driver composes the two).
 """
 
 from __future__ import annotations
@@ -77,12 +81,7 @@ class CascadeState(NamedTuple):
 
 def make(**spec):
     cfg = CascadeConfig(**spec)
-    if cfg.fanout < 2 or (cfg.fanout & (cfg.fanout - 1)):
-        raise ValueError("fanout must be a power of two >= 2")
-    if cfg.levels < 1:
-        raise ValueError("need at least one disk level")
-    if cfg.ram_q + (cfg.levels) * cfg.lb >= cfg.p:
-        raise ValueError("fingerprint bits p too small for the deepest level")
+    _check_geometry(cfg)
     qf_filter._check_backend(cfg)
     return cfg, CascadeState(
         q0=qf.empty(cfg.q0_cfg),
@@ -97,7 +96,7 @@ def _collapse_into(cfg: CascadeConfig, state: CascadeState, i: int) -> CascadeSt
         (cfg.level_cfg(j), state.levels[j]) for j in range(i + 1)
     ]
     tgt = cfg.level_cfg(i)
-    merged = qf.multi_merge(tgt, parts)
+    merged = qf.multi_merge(tgt, parts, build=qf_filter.build_fn(cfg))
     # I/O: stream each participating non-empty disk level in, target out
     read = jnp.zeros((), jnp.float32)
     for j in range(i + 1):
@@ -187,7 +186,12 @@ def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
 
     Duplicate-safe: the j-th batch occurrence of a key targets the j-th
     stored copy in top-down order, so a batch can delete more copies of
-    a key than any single level holds."""
+    a key than any single level holds.
+
+    Disk-level deletes are charged to ``IOCounters`` under the same
+    schedule as ``probe``: one random page read per key targeted at a
+    non-empty level (the cluster must be fetched) and one random page
+    write per copy actually removed; Q0 deletes are RAM-only and free."""
     valid = qf_filter.valid_mask(keys, k)
     structures = [(cfg.q0_cfg, state.q0)] + [
         (cfg.level_cfg(i), state.levels[i]) for i in range(cfg.levels)
@@ -196,26 +200,202 @@ def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
     rank = qf_filter.batch_occurrence_rank(fq0, fr0, valid)
     cum = jnp.zeros(keys.shape[0], jnp.int32)
     out = []
-    for c, s in structures:
+    reads = jnp.zeros((), jnp.int32)
+    writes = jnp.zeros((), jnp.int32)
+    for lvl, (c, s) in enumerate(structures):
         fq, fr = qf.fingerprints(c, keys)
         cnt = qf_filter.multiplicity(c, s, fq, fr)
         todel = valid & (rank >= cum) & (rank < cum + cnt)
-        out.append(qf_filter.delete_masked(c, s, fq, fr, todel))
+        new = qf_filter.delete_masked(c, s, fq, fr, todel)
+        if lvl > 0:  # disk-resident level
+            reads = reads + jnp.where(
+                s.n > 0, jnp.sum(todel, dtype=jnp.int32), jnp.int32(0)
+            )
+            writes = writes + (s.n - new.n)
+        out.append(new)
         cum = cum + cnt
-    return state._replace(q0=out[0], levels=tuple(out[1:]))
+    io = state.io._replace(
+        rand_page_reads=state.io.rand_page_reads + reads,
+        rand_page_writes=state.io.rand_page_writes + writes,
+    )
+    return CascadeState(q0=out[0], levels=tuple(out[1:]), io=io)
+
+
+def _all_parts(cfg: CascadeConfig, sa, sb):
+    return (
+        [(cfg.q0_cfg, sa.q0), (cfg.q0_cfg, sb.q0)]
+        + [(cfg.level_cfg(j), sa.levels[j]) for j in range(cfg.levels)]
+        + [(cfg.level_cfg(j), sb.levels[j]) for j in range(cfg.levels)]
+    )
 
 
 def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
-    """Union of two cascades (same cfg): component-wise QF merges, then
-    one collapse pass if the combined Q0 crossed its max load."""
-    q0 = qf.merge(cfg.q0_cfg, cfg.q0_cfg, cfg.q0_cfg, sa.q0, sb.q0)
-    levels = tuple(
-        qf.merge(cfg.level_cfg(i), cfg.level_cfg(i), cfg.level_cfg(i),
-                 sa.levels[i], sb.levels[i])
-        for i in range(cfg.levels)
+    """Union of two cascades (same cfg) as ONE streaming pass into the
+    smallest level that fits the combined count (paper Fig. 5's k-way
+    merge).
+
+    The previous component-wise merge overflowed a level whenever the
+    two inputs' same-index levels were each more than half full — the
+    collapse trigger only looked at Q0's load.  Choosing the target by
+    the *total* count can never oversubscribe a level that fits; if even
+    the bottom level cannot hold the union, the merge streams into the
+    bottom anyway and the ``overflow`` flag reports the (physically
+    unavoidable) oversubscription — ``grow``/``resize`` the inputs
+    first.
+
+    The expensive decode + sort over all 2L + 2 components runs ONCE,
+    in the deepest level's (q, r) split; requotienting is monotone
+    w.r.t. lexicographic order, so each ``lax.switch`` branch only
+    re-splits elementwise and rebuilds at its target geometry.
+    """
+    L = cfg.levels
+    deep = cfg.level_cfg(L - 1)
+    build = qf_filter.build_fn(cfg)
+
+    qs_all, rs_all, valid_all = [], [], []
+    total = jnp.zeros((), jnp.int32)
+    overflow = jnp.zeros((), jnp.bool_)
+    for c, s in _all_parts(cfg, sa, sb):
+        fq, fr, n = qf.extract(c, s)
+        fq, fr = qf._requotient(fq, fr, c, deep)
+        qs_all.append(fq)
+        rs_all.append(fr)
+        valid_all.append(jnp.arange(fq.shape[0]) < n)
+        total = total + n
+        overflow = overflow | s.overflow
+    allq, allr = qf._pad_sort(
+        jnp.concatenate(qs_all),
+        jnp.concatenate(rs_all),
+        jnp.concatenate(valid_all),
     )
-    state = CascadeState(q0=q0, levels=levels, io=iostats.add(sa.io, sb.io))
-    return _maybe_collapse(cfg, state, qf.load(cfg.q0_cfg, q0) >= cfg.max_load)
+
+    read = jnp.zeros((), jnp.float32)
+    for j in range(L):
+        for s in (sa.levels[j], sb.levels[j]):
+            read = read + jnp.where(
+                s.n > 0, jnp.float32(cfg.level_cfg(j).size_bytes), jnp.float32(0)
+            )
+    io = iostats.add(sa.io, sb.io)
+    io = io._replace(seq_read_bytes=io.seq_read_bytes + read, merges=io.merges + 1)
+
+    caps = jnp.asarray([cfg.level_cfg(i).capacity for i in range(L)], jnp.int32)
+    fits = total <= caps
+    branch = jnp.where(jnp.any(fits), jnp.argmax(fits), L - 1).astype(jnp.int32)
+
+    def mk(i):
+        tgt = cfg.level_cfg(i)
+
+        def build_at(args):
+            allq, allr, io = args
+            tq, tr = qf._requotient(allq, allr, deep, tgt)
+            merged = build(tgt, tq, tr, total)
+            merged = merged._replace(overflow=merged.overflow | overflow)
+            io2 = io._replace(seq_write_bytes=io.seq_write_bytes + tgt.size_bytes)
+            levels = tuple(
+                merged if j == i else qf.empty(cfg.level_cfg(j)) for j in range(L)
+            )
+            return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=levels, io=io2)
+
+        return build_at
+
+    return jax.lax.switch(branch, [mk(i) for i in range(L)], (allq, allr, io))
+
+
+def needs_resize(cfg: CascadeConfig, state):
+    """Device predicate: a full Q0 could fail to collapse anywhere —
+    i.e. Q0's capacity plus everything already on disk no longer fits
+    the bottom level (the paper's ``levels >= log_b(n/cap0)`` sizing).
+    Q0's *actual* count is taken when it exceeds the design capacity
+    (a large batch can overshoot into the slack), so the predicate
+    cannot report False while a collapse is already impossible."""
+    ns = jnp.stack([s.n for s in state.levels])
+    q0_worst = jnp.maximum(state.q0.n, jnp.int32(cfg.q0_cfg.capacity))
+    return q0_worst + jnp.sum(ns) > jnp.int32(cfg.level_cfg(cfg.levels - 1).capacity)
+
+
+def _check_geometry(cfg: CascadeConfig) -> None:
+    if cfg.fanout < 2 or (cfg.fanout & (cfg.fanout - 1)):
+        raise ValueError("fanout must be a power of two >= 2")
+    if cfg.levels < 1:
+        raise ValueError("need at least one disk level")
+    if cfg.ram_q + (cfg.levels) * cfg.lb >= cfg.p:
+        raise ValueError("fingerprint bits p too small for the deepest level")
+
+
+def grow(cfg: CascadeConfig, state):
+    """Deepen the level stack by one (host-level structural op).
+
+    The new bottom level starts empty, so no data moves — growth cost
+    is deferred to the collapse that eventually fills it (charged there
+    as usual).  Requires fingerprint headroom: the new deepest level
+    still needs r >= 1 remainder bits.
+    """
+    new_cfg = cfg._replace(levels=cfg.levels + 1)
+    _check_geometry(new_cfg)
+    return new_cfg, CascadeState(
+        q0=state.q0,
+        levels=state.levels + (qf.empty(new_cfg.level_cfg(cfg.levels)),),
+        io=state.io._replace(resizes=state.io.resizes + 1),
+    )
+
+
+def resize(cfg: CascadeConfig, state, levels: int = None, fanout: int = None):
+    """Re-shape the hierarchy: deepen the stack and/or widen the fanout.
+
+    Deepening with the fanout unchanged appends empty levels (free).
+    Any other geometry change re-streams the whole cascade once into
+    the smallest new level that fits the total count (one sequential
+    pass, charged to ``IOCounters``).
+    """
+    new_cfg = cfg._replace(
+        levels=cfg.levels if levels is None else levels,
+        fanout=cfg.fanout if fanout is None else fanout,
+    )
+    _check_geometry(new_cfg)
+    if new_cfg.fanout == cfg.fanout and new_cfg.levels >= cfg.levels:
+        extra = tuple(
+            qf.empty(new_cfg.level_cfg(i)) for i in range(cfg.levels, new_cfg.levels)
+        )
+        return new_cfg, CascadeState(
+            q0=state.q0,
+            levels=state.levels + extra,
+            io=state.io._replace(resizes=state.io.resizes + 1),
+        )
+    # geometry change: one streaming pass into the smallest fitting level
+    total = int(state.q0.n) + sum(int(s.n) for s in state.levels)
+    target = next(
+        (
+            i
+            for i in range(new_cfg.levels)
+            if total <= new_cfg.level_cfg(i).capacity
+        ),
+        new_cfg.levels - 1,
+    )
+    parts = [(cfg.q0_cfg, state.q0)] + [
+        (cfg.level_cfg(j), state.levels[j]) for j in range(cfg.levels)
+    ]
+    tgt = new_cfg.level_cfg(target)
+    merged = qf.multi_merge(tgt, parts, build=qf_filter.build_fn(cfg))
+    read = jnp.zeros((), jnp.float32)
+    for j in range(cfg.levels):
+        read = read + jnp.where(
+            state.levels[j].n > 0,
+            jnp.float32(cfg.level_cfg(j).size_bytes),
+            jnp.float32(0),
+        )
+    io = state.io._replace(
+        seq_read_bytes=state.io.seq_read_bytes + read,
+        seq_write_bytes=state.io.seq_write_bytes + tgt.size_bytes,
+        resizes=state.io.resizes + 1,
+        merges=state.io.merges + 1,
+    )
+    new_levels = tuple(
+        merged if j == target else qf.empty(new_cfg.level_cfg(j))
+        for j in range(new_cfg.levels)
+    )
+    return new_cfg, CascadeState(
+        q0=qf.empty(new_cfg.q0_cfg), levels=new_levels, io=io
+    )
 
 
 def stats(cfg: CascadeConfig, state):
@@ -244,5 +424,8 @@ IMPL = register(
         delete=delete,
         merge=merge,
         probe=probe,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
     )
 )

@@ -22,7 +22,12 @@ from repro.core.cost_model import IOLog
 
 
 class IOCounters(NamedTuple):
-    """Pytree of device scalars mirroring the fields of ``IOLog``."""
+    """Pytree of device scalars mirroring the fields of ``IOLog``.
+
+    ``resizes`` (structural grow/resize passes; their streaming traffic
+    is charged into the seq byte counters) has no ``IOLog`` counterpart
+    and is reported only through ``stats``.
+    """
 
     rand_page_reads: jnp.ndarray  # int32
     rand_page_writes: jnp.ndarray  # int32
@@ -30,6 +35,7 @@ class IOCounters(NamedTuple):
     seq_write_bytes: jnp.ndarray  # float32
     flushes: jnp.ndarray  # int32
     merges: jnp.ndarray  # int32
+    resizes: jnp.ndarray  # int32
 
 
 def zeros() -> IOCounters:
@@ -41,6 +47,7 @@ def zeros() -> IOCounters:
         seq_write_bytes=jnp.zeros((), jnp.float32),
         flushes=jnp.zeros((), jnp.int32),
         merges=jnp.zeros((), jnp.int32),
+        resizes=jnp.zeros((), jnp.int32),
     )
 
 

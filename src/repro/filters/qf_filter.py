@@ -142,6 +142,39 @@ def merge(cfg: QFilterConfig, sa, sb):
     return qf.merge(core, core, core, sa, sb)
 
 
+def build_fn(cfg):
+    """The bulk rebuild pass for this config's backend (reference jnp
+    scatter vs the Pallas ``qf_build_planes`` kernel)."""
+    return kops.build_sorted if cfg.backend == "pallas" else qf.build_sorted
+
+
+def needs_resize(cfg: QFilterConfig, state):
+    """Device predicate: at/over the paper's max-load operating point."""
+    return state.n >= jnp.int32(cfg.core.capacity)
+
+
+def resize(cfg: QFilterConfig, state, new_q: int):
+    """Re-split the p-bit fingerprints at ``new_q`` (paper §3 'Resizing').
+
+    Host-level structural op: the slot planes change shape.  The
+    requotient+rebuild pass is one streaming device pass, routed through
+    the Pallas build kernel when ``backend="pallas"``.
+    """
+    new_r = cfg.q + cfg.r - new_q
+    if not (1 <= new_q <= 30 and 1 <= new_r):
+        raise ValueError(
+            f"cannot re-split p={cfg.q + cfg.r} fingerprint bits at q={new_q}"
+        )
+    core_new, st = qf.resize(cfg.core, state, new_q, build=build_fn(cfg))
+    del core_new  # same fields as cfg.core with the new (q, r) split
+    return cfg._replace(q=new_q, r=new_r), st
+
+
+def grow(cfg: QFilterConfig, state):
+    """One doubling step: steal one remainder bit for the quotient."""
+    return resize(cfg, state, cfg.q + 1)
+
+
 def stats(cfg: QFilterConfig, state):
     return {
         "n": state.n,
@@ -162,5 +195,8 @@ IMPL = register(
         stats=stats,
         delete=delete,
         merge=merge,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
     )
 )

@@ -15,9 +15,21 @@ Protocol (all ops pure; states are pytrees; every op is jittable):
     merge(cfg, state_a, state_b)  -> state          (optional)
     probe(cfg, state, keys)       -> (state, bool[B])  # contains + I/O accounting
     stats(cfg, state)             -> dict[str, scalar]
+    needs_resize(cfg, state)      -> bool[]         (optional, jittable)
+    grow(cfg, state)              -> (cfg, state)   (optional, host-level)
+    resize(cfg, state, **kw)      -> (cfg, state)   (optional, host-level)
 
 ``k`` is an optional valid-prefix count so fixed-shape (padded) batches
 can carry a dynamic number of real keys through ``lax.scan``.
+
+Resize changes array shapes, so it cannot live under ``jit`` — the
+protocol splits it into a jit-friendly device predicate
+(``needs_resize``) and host-level structural steps: ``grow`` is the
+canonical one-step doubling (guaranteed to clear ``needs_resize``
+eventually), ``resize`` takes per-family keyword targets (``new_q`` for
+the QF families, ``levels``/``fanout`` for the cascade, ``factor`` for
+the Bloom family).  The façade's ``auto_grow`` composes them into an
+ingest driver.
 """
 
 from __future__ import annotations
@@ -36,6 +48,9 @@ class FilterImpl(NamedTuple):
     delete: Optional[Callable] = None
     merge: Optional[Callable] = None
     probe: Optional[Callable] = None  # (cfg, state, keys) -> (state, bool[B])
+    needs_resize: Optional[Callable] = None  # (cfg, state) -> bool[] (device)
+    grow: Optional[Callable] = None  # (cfg, state) -> (cfg, state)
+    resize: Optional[Callable] = None  # (cfg, state, **kw) -> (cfg, state)
     # config-dependent capability (e.g. bloom deletes only when counting);
     # None means "delete works for every cfg of this type"
     can_delete: Optional[Callable] = None  # (cfg) -> bool

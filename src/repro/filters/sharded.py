@@ -107,6 +107,53 @@ def merge(cfg: ShardedQFilterConfig, sa, sb):
     return jax.vmap(lambda a, b: qf.merge(local, local, local, a, b))(sa, sb)
 
 
+def needs_resize(cfg: ShardedQFilterConfig, state):
+    """Device predicate: global count at the paper's max-load point."""
+    return jnp.sum(state.n) >= jnp.int32(cfg.core.local_cfg.capacity * cfg.n_shards)
+
+
+def grow(cfg: ShardedQFilterConfig, state):
+    """Per-shard growth: every shard steals one remainder bit, doubling
+    the global bucket count while the quotient-prefix shard map is
+    untouched (the owner bits are the *top* bits of the quotient).
+
+    The stored local remainders are the global ``r`` real bits (the
+    local config only declares the wider ``r + shard_bits`` slot so the
+    shard id stays reconstructable), so the requotient must move the
+    top bit of the *r-bit* remainder — the width-true split below, not
+    ``local_cfg.r``.
+    """
+    if cfg.r <= 1:
+        raise ValueError(
+            f"cannot grow: fingerprint bits exhausted (q={cfg.q}, r={cfg.r})"
+        )
+    new_cfg = cfg._replace(q=cfg.q + 1, r=cfg.r - 1)
+    lold, lnew = cfg.core.local_cfg, new_cfg.core.local_cfg
+    win = lold._replace(r=cfg.r)
+    wout = lnew._replace(r=cfg.r - 1)
+    pad = lnew.total_slots - lold.total_slots
+
+    def one(s):
+        qs, rs, n = qf.extract(lold, s)
+        qs, rs = qf._requotient(qs, rs, win, wout)
+        qs = jnp.concatenate([qs, jnp.full((pad,), qf.INT32_MAX, jnp.int32)])
+        rs = jnp.concatenate([rs, jnp.full((pad,), qf.UINT32_MAX, jnp.uint32)])
+        new = qf.build_sorted(lnew, qs, rs, n)
+        return new._replace(overflow=new.overflow | s.overflow)
+
+    return new_cfg, jax.vmap(one)(state)
+
+
+def resize(cfg: ShardedQFilterConfig, state, new_q: int):
+    """Grow to ``new_q`` global quotient bits (shrinking a sharded QF
+    would need cross-shard redistribution — not supported)."""
+    if new_q < cfg.q:
+        raise NotImplementedError("sharded_qf only grows (new_q >= q)")
+    while cfg.q < new_q:
+        cfg, state = grow(cfg, state)
+    return cfg, state
+
+
 def stats(cfg: ShardedQFilterConfig, state):
     return {
         "n": jnp.sum(state.n),
@@ -127,5 +174,8 @@ IMPL = register(
         contains=contains,
         stats=stats,
         merge=merge,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
     )
 )

@@ -41,7 +41,8 @@ def build_sorted(
     idx = jnp.arange(fq.shape[0], dtype=jnp.int32)
     valid = idx < nn
 
-    pos = idx + jax.lax.cummax(jnp.where(valid, fq, -INT32_MAX) - idx)
+    # sentinel stays out of the subtraction (-INT32_MAX - idx wraps for idx >= 2)
+    pos = idx + jax.lax.cummax(jnp.where(valid, fq - idx, -INT32_MAX))
     overflow = jnp.any(valid & (pos >= t))
     spos = jnp.where(valid, pos, INT32_MAX)
     con_b = valid & (idx > 0) & (fq == jnp.roll(fq, 1))

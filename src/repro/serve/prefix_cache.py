@@ -18,13 +18,23 @@ from repro.core.fingerprint import fold_bytes
 
 
 class PrefixCacheFilter:
-    """Host-facing wrapper holding one functional QF ``(cfg, state)``."""
+    """Host-facing wrapper holding one functional QF ``(cfg, state)``.
+
+    With ``auto_grow=True`` (default) the filter ingests through
+    ``filters.auto_grow``: when the cache population crosses the QF's
+    max-load point, one remainder bit is re-split into the quotient and
+    the table doubles in place — the serving tier never has to size the
+    filter for peak cache population up front.  Each doubling halves
+    the remaining remainder bits, i.e. doubles the FP (wasted remote
+    probe) rate, so provision ``r`` with the headroom you care about.
+    """
 
     def __init__(self, q: int = 16, r: int = 14, seed: int = 0,
-                 backend: str = "reference"):
+                 backend: str = "reference", auto_grow: bool = True):
         self.cfg, self.state = filters.make(
             "qf", q=q, r=r, seed=seed, backend=backend
         )
+        self.auto_grow = auto_grow
 
     @staticmethod
     def _digest(prompts: np.ndarray) -> jnp.ndarray:
@@ -45,7 +55,12 @@ class PrefixCacheFilter:
             seen[int(k)] = i
         misses = keys[jnp.asarray(~hit)]
         if misses.shape[0]:
-            self.state = filters.insert(self.cfg, self.state, misses)
+            if self.auto_grow:
+                self.cfg, self.state = filters.auto_grow(
+                    self.cfg, self.state, misses
+                )
+            else:
+                self.state = filters.insert(self.cfg, self.state, misses)
         return hit
 
     def evict(self, prompts: np.ndarray) -> None:

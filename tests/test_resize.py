@@ -1,0 +1,386 @@
+"""Dynamic-resizing tests: the resize/needs_resize/grow protocol and the
+``auto_grow`` ingest driver, across every registered filter family.
+
+The paper's abstract claims the QF "can be dynamically resized"; these
+tests pin the end-to-end version of that claim:
+
+* growing preserves the stored fingerprint multiset exactly (and a
+  grow-then-shrink round-trip is the identity on the multiset);
+* no false negatives across any growth step, for any family;
+* ``auto_grow`` ingest of 8x a filter's initial capacity completes with
+  no overflow, and — for the QF family, whose p-bit fingerprints are
+  split-invariant — answers *identically* to a filter built statically
+  at the final size;
+* ``cascade.merge`` of two cascades whose same-index levels are each
+  more than half full no longer trips level overflow (regression);
+* ``build_sorted``'s sentinel arithmetic does not depend on the amount
+  of padding (regression for the int32 wraparound).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:  # property tests degrade to skips without hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # inert decorator stand-ins so the module imports
+        return lambda f: f
+
+    settings = given
+
+    class _Anything:
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _Anything()
+
+from repro import filters
+from repro.core import quotient_filter as qf
+
+# name -> (registry name, spec, chunk): specs sized so 8x growth fits the
+# fingerprint budget; chunks stay below each structure's slack
+GROW_CASES = {
+    "qf": ("qf", dict(q=8, r=16), 128),
+    "qf_pallas": ("qf", dict(q=8, r=16, backend="pallas"), 128),
+    "bloom": ("bloom", dict(m_bits=1 << 12, k=6, counting=True), 128),
+    "blocked_bloom": (
+        "blocked_bloom",
+        dict(m_bits=1 << 14, k=6, block_bits=1 << 10),
+        128,
+    ),
+    "buffered_qf": ("buffered_qf", dict(ram_q=7, disk_q=10, p=26), 64),
+    "cascade": ("cascade", dict(ram_q=7, p=30, fanout=4, levels=1), 64),
+    "sharded_qf": ("sharded_qf", dict(q=8, r=16, n_shards=1), 64),
+}
+
+
+def _keys(seed, n, lo=0, hi=2**31):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+def _initial_capacity(name, cfg) -> int:
+    if name == "qf":
+        return cfg.core.capacity
+    if name == "buffered_qf":
+        return cfg.disk.capacity
+    if name == "cascade":
+        return cfg.level_cfg(cfg.levels - 1).capacity
+    if name == "sharded_qf":
+        return cfg.core.local_cfg.capacity * cfg.n_shards
+    from repro.filters import bloom_filter as bf
+
+    return bf._capacity(cfg)
+
+
+@pytest.fixture(params=sorted(GROW_CASES), name="case")
+def _case(request):
+    return request.param
+
+
+class TestProtocol:
+    def test_every_family_answers_resize_through_facade(self):
+        """Acceptance: resize/needs_resize/grow for every registered name."""
+        for name in filters.names():
+            assert filters.supports(name, "resize"), name
+            assert filters.supports(name, "grow"), name
+            assert filters.supports(name, "needs_resize"), name
+
+    def test_needs_resize_is_device_scalar_and_jittable(self, case):
+        import jax
+
+        name, spec, _ = GROW_CASES[case]
+        cfg, stt = filters.make(name, **spec)
+        flag = jax.jit(lambda s: filters.needs_resize(cfg, s))(stt)
+        assert flag.shape == () and flag.dtype == jnp.bool_
+        assert not bool(flag)
+
+    def test_grow_doubles_and_clears_predicate(self, case):
+        name, spec, chunk = GROW_CASES[case]
+        cfg, stt = filters.make(name, **spec)
+        keys = _keys(1, _initial_capacity(name, cfg))
+        for i in range(0, keys.shape[0], chunk):
+            stt = filters.insert(cfg, stt, keys[i : i + chunk])
+        assert bool(filters.needs_resize(cfg, stt))
+        new_cfg, new_st = filters.grow(cfg, stt)
+        assert new_cfg != cfg
+        assert not bool(filters.needs_resize(new_cfg, new_st))
+        assert bool(filters.contains(new_cfg, new_st, keys).all())
+
+
+class TestAutoGrow:
+    def test_ingest_8x_initial_capacity(self, case):
+        """Acceptance: 8x growth, zero false negatives, no overflow."""
+        name, spec, chunk = GROW_CASES[case]
+        cfg, stt = filters.make(name, **spec)
+        cap0 = _initial_capacity(name, cfg)
+        n = 8 * cap0
+        n += (-n) % chunk  # sharded insert needs whole batches
+        keys = _keys(2, n)
+        for i in range(0, n, chunk):
+            cfg, stt = filters.auto_grow(cfg, stt, keys[i : i + chunk])
+        s = filters.stats(cfg, stt)
+        assert int(s["n"]) == n
+        if "overflow" in s:
+            assert not bool(s["overflow"])
+        assert bool(filters.contains(cfg, stt, keys).all())
+
+    def test_qf_auto_grow_matches_static_filter(self):
+        """QF fingerprints are (q, r)-split-invariant, so a grown filter
+        answers exactly like one built statically at the final size."""
+        cfg, stt = filters.make("qf", q=8, r=16)
+        keys = _keys(3, 8 * cfg.core.capacity)
+        for i in range(0, keys.shape[0], 128):
+            cfg, stt = filters.auto_grow(cfg, stt, keys[i : i + 128])
+        static_cfg, static_st = filters.make("qf", q=cfg.q, r=cfg.r)
+        static_st = filters.insert(static_cfg, static_st, keys)
+        probes = jnp.concatenate([keys[:2048], _keys(4, 8192, lo=2**31, hi=2**32)])
+        got = filters.contains(cfg, stt, probes)
+        want = filters.contains(static_cfg, static_st, probes)
+        assert bool((got == want).all())
+
+    def test_resize_io_is_charged(self):
+        cfg, stt = filters.make("buffered_qf", ram_q=7, disk_q=10, p=26)
+        keys = _keys(5, cfg.disk.capacity)
+        for i in range(0, keys.shape[0], 64):
+            cfg, stt = filters.auto_grow(cfg, stt, keys[i : i + 64])
+        s = filters.stats(cfg, stt)
+        assert int(s["resizes"]) >= 1
+        # a resize re-streams the disk QF: bytes beyond the flush traffic
+        assert float(s["seq_read_bytes"]) > 0
+
+
+class TestHypothesisRoundTrips:
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="needs hypothesis")
+    @settings(deadline=None, max_examples=20)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 300),
+        dq=st.integers(1, 3),
+    )
+    def test_grow_then_shrink_preserves_fingerprint_multiset(self, seed, n, dq):
+        cfg = qf.QFConfig(q=9, r=12, slack=512)
+        keys = _keys(seed, n)
+        stt = qf.insert(cfg, qf.empty(cfg), keys)
+        q0, r0, n0 = qf.extract(cfg, stt)
+        up_cfg, up = qf.resize(cfg, stt, cfg.q + dq)
+        down_cfg, down = qf.resize(up_cfg, up, cfg.q)
+        assert down_cfg == cfg
+        q1, r1, n1 = qf.extract(cfg, down)
+        assert int(n0) == int(n1) == n
+        assert bool((q0[:n] == q1[:n]).all())
+        assert bool((r0[:n] == r1[:n]).all())
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="needs hypothesis")
+    @settings(deadline=None, max_examples=15)
+    @given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4))
+    def test_no_false_negatives_across_any_growth_step(self, seed, steps):
+        cfg, stt = filters.make("qf", q=8, r=16)
+        keys = _keys(seed, 150)
+        stt = filters.insert(cfg, stt, keys)
+        for _ in range(steps):
+            cfg, stt = filters.grow(cfg, stt)
+            assert bool(filters.contains(cfg, stt, keys).all())
+        assert int(filters.stats(cfg, stt)["n"]) == 150
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="needs hypothesis")
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_auto_grow_matches_static_answers(self, seed):
+        cfg, stt = filters.make("qf", q=8, r=14)
+        keys = _keys(seed, 4 * cfg.core.capacity)
+        for i in range(0, keys.shape[0], 128):
+            cfg, stt = filters.auto_grow(cfg, stt, keys[i : i + 128])
+        scfg, sst = filters.make("qf", q=cfg.q, r=cfg.r)
+        sst = filters.insert(scfg, sst, keys)
+        probes = _keys(seed + 1, 2048, lo=2**31, hi=2**32)
+        assert bool(
+            (filters.contains(cfg, stt, probes) == filters.contains(scfg, sst, probes))
+            .all()
+        )
+
+
+class TestPipelineGrowth:
+    def test_dedup_pipeline_deepens_and_snapshots_across_growth(self):
+        """The pipeline ingests through ``auto_grow``; a snapshot taken
+        after the cascade deepened must restore into a fresh pipeline
+        that still starts at the configured depth."""
+        from repro.data.pipeline import DedupPipeline, PipelineConfig
+
+        cfgp = PipelineConfig(
+            seq_len=64, batch_size=2, duplicate_fraction=0.0, seed=9,
+            dedup_ram_q=7, dedup_p=30, dedup_fanout=4, dedup_levels=1,
+        )
+        pipe = DedupPipeline(cfgp)
+        rng = np.random.default_rng(3)
+        all_ids = []
+        for _ in range(24):  # ~1.5k uniques vs bottom capacity 384
+            ids = rng.integers(0, 2**32, 64, dtype=np.uint64).astype(np.uint32)
+            all_ids.append(ids)
+            pipe._dedup(ids)
+        assert pipe.filter_cfg.levels > 1  # grew through auto_grow
+        assert not bool(
+            filters.stats(pipe.filter_cfg, pipe.filter_state)["overflow"]
+        )
+        snap = pipe.snapshot()
+        pipe2 = DedupPipeline(cfgp)
+        pipe2.restore(snap)
+        assert pipe2.filter_cfg == pipe.filter_cfg
+        # every previously ingested id must now be recognized as a dup
+        assert not pipe2._dedup(all_ids[0]).any()
+
+
+class TestMergeOverflowRegression:
+    def test_cascade_merge_of_two_half_full_cascades(self):
+        """Two cascades whose level-0 is ~full: the old component-wise
+        merge packed 2 * 3072 fingerprints into a level with 4096 + 1024
+        slots and tripped ``overflow``; the streaming merge picks the
+        smallest level that fits the union."""
+        spec = dict(ram_q=10, p=30, fanout=4, levels=2)
+        cfg, sa = filters.make("cascade", **spec)
+        _, sb = filters.make("cascade", **spec)
+        ka = _keys(10, 3100)
+        kb = _keys(11, 3100, lo=2**30, hi=2**31)
+        for i in range(0, 3100, 256):
+            sa = filters.insert(cfg, sa, ka[i : i + 256])
+            sb = filters.insert(cfg, sb, kb[i : i + 256])
+        # the precondition of the regression: same-index levels > half full
+        la = np.asarray(filters.stats(cfg, sa)["level_counts"])
+        lb = np.asarray(filters.stats(cfg, sb)["level_counts"])
+        cap0 = cfg.level_cfg(0).capacity
+        assert la[0] > cap0 // 2 and lb[0] > cap0 // 2
+        merged = filters.merge(cfg, sa, sb)
+        s = filters.stats(cfg, merged)
+        assert not bool(s["overflow"])
+        assert int(s["n"]) == int(la.sum() + lb.sum()) + int(sa.q0.n) + int(sb.q0.n)
+        assert bool(filters.contains(cfg, merged, ka).all())
+        assert bool(filters.contains(cfg, merged, kb).all())
+
+    def test_overflow_flag_survives_multi_merge_paths(self):
+        """Regression: ``multi_merge`` dropped input overflow flags, so
+        grow/merge of an already-overflowed structure reported healthy."""
+        cfg, stt = filters.make("buffered_qf", ram_q=7, disk_q=10, p=26)
+        stt = stt._replace(
+            disk=stt.disk._replace(overflow=jnp.ones((), jnp.bool_))
+        )
+        cfg2, grown = filters.grow(cfg, stt)
+        assert bool(filters.stats(cfg2, grown)["overflow"])
+        ccfg, ca = filters.make("cascade", ram_q=7, p=30, fanout=4, levels=1)
+        _, cb = filters.make("cascade", ram_q=7, p=30, fanout=4, levels=1)
+        ca = ca._replace(q0=ca.q0._replace(overflow=jnp.ones((), jnp.bool_)))
+        assert bool(filters.stats(ccfg, filters.merge(ccfg, ca, cb))["overflow"])
+
+    def test_cascade_needs_resize_sees_q0_overshoot(self):
+        """Regression: a batch overshooting Q0's design capacity could
+        make every collapse impossible while ``needs_resize`` (which
+        used the design capacity, not the actual count) stayed False."""
+        cfg, stt = filters.make("cascade", ram_q=7, p=30, fanout=4, levels=1)
+        big = _keys(50, 448)  # > bottom capacity 384: no collapse fits
+        stt = filters.insert(cfg, stt, big)
+        assert int(stt.q0.n) == 448  # stuck in Q0's slack
+        assert bool(filters.needs_resize(cfg, stt))
+        cfg, stt = filters.grow(cfg, stt)
+        stt = filters.insert(cfg, stt, _keys(51, 64))
+        assert bool(filters.contains(cfg, stt, big).all())
+        assert not bool(filters.stats(cfg, stt)["overflow"])
+
+    def test_buffered_merge_then_grow_recovers(self):
+        """Merging two near-full buffered QFs oversubscribes the disk
+        level; needs_resize flags it and one grow step restores the
+        operating point with no false negatives."""
+        spec = dict(ram_q=7, disk_q=10, p=26)
+        cfg, sa = filters.make("buffered_qf", **spec)
+        _, sb = filters.make("buffered_qf", **spec)
+        ka = _keys(12, cfg.disk.capacity - 128)
+        kb = _keys(13, cfg.disk.capacity - 128, lo=2**30, hi=2**31)
+        for i in range(0, ka.shape[0], 64):
+            sa = filters.insert(cfg, sa, ka[i : i + 64])
+            sb = filters.insert(cfg, sb, kb[i : i + 64])
+        merged = filters.merge(cfg, sa, sb)
+        assert bool(filters.needs_resize(cfg, merged))
+        cfg2, grown = filters.grow(cfg, merged)
+        assert not bool(filters.needs_resize(cfg2, grown))
+        assert bool(filters.contains(cfg2, grown, ka).all())
+        assert bool(filters.contains(cfg2, grown, kb).all())
+
+
+class TestSentinelClamp:
+    def test_build_is_invariant_to_padding_amount(self):
+        """Regression: the padding sentinel used to enter ``fq - idx``
+        arithmetic, wrapping int32 for rows with idx >= 2.  The built
+        planes must not depend on how much padding follows the valid
+        prefix."""
+        cfg = qf.QFConfig(q=6, r=8, slack=64)
+        keys = _keys(20, 40)
+        fq, fr = qf.fingerprints(cfg, keys)
+        fq, fr = qf._pad_sort(fq, fr, jnp.ones((40,), jnp.bool_))
+        built_tight = qf.build_sorted(cfg, fq, fr, 40)
+        pad = 1000
+        fq_p = jnp.concatenate([fq, jnp.full((pad,), qf.INT32_MAX, jnp.int32)])
+        fr_p = jnp.concatenate([fr, jnp.full((pad,), qf.UINT32_MAX, jnp.uint32)])
+        built_padded = qf.build_sorted(cfg, fq_p, fr_p, 40)
+        for a, b in zip(built_tight, built_padded):
+            assert bool(jnp.array_equal(a, b))
+        assert not bool(built_padded.overflow)
+
+    def test_kernel_build_matches_reference_with_heavy_padding(self):
+        from repro.kernels import ops as kops
+
+        cfg = qf.QFConfig(q=6, r=8, slack=64)
+        keys = _keys(21, 30)
+        fq, fr = qf.fingerprints(cfg, keys)
+        fq, fr = qf._pad_sort(fq, fr, jnp.ones((30,), jnp.bool_))
+        pad = 2048 - 30
+        fq = jnp.concatenate([fq, jnp.full((pad,), qf.INT32_MAX, jnp.int32)])
+        fr = jnp.concatenate([fr, jnp.full((pad,), qf.UINT32_MAX, jnp.uint32)])
+        ref = qf.build_sorted(cfg, fq, fr, 30)
+        ker = kops.build_sorted(cfg, fq, fr, 30)
+        for a, b in zip(ref, ker):
+            assert bool(jnp.array_equal(a, b))
+
+
+class TestLayeredDeleteIO:
+    def test_buffered_disk_delete_charges_io(self):
+        from repro.filters import buffered as fb
+
+        cfg, stt = filters.make("buffered_qf", ram_q=8, disk_q=12, p=24)
+        keys = _keys(30, 512)
+        stt = filters.insert(cfg, stt, keys)
+        stt = fb.flush(cfg, stt)  # all 512 copies now disk-resident
+        before = filters.stats(cfg, stt)
+        stt = filters.delete(cfg, stt, keys[:100])
+        after = filters.stats(cfg, stt)
+        assert int(after["rand_page_reads"]) - int(before["rand_page_reads"]) == 100
+        assert int(after["rand_page_writes"]) - int(before["rand_page_writes"]) == 100
+        assert int(after["n"]) == 412
+
+    def test_buffered_ram_delete_is_free(self):
+        cfg, stt = filters.make("buffered_qf", ram_q=8, disk_q=12, p=24)
+        keys = _keys(31, 100)
+        stt = filters.insert(cfg, stt, keys)  # all in RAM, no flush at 100/192
+        before = filters.stats(cfg, stt)
+        stt = filters.delete(cfg, stt, keys[:50])
+        after = filters.stats(cfg, stt)
+        assert int(after["rand_page_reads"]) == int(before["rand_page_reads"])
+        assert int(after["rand_page_writes"]) == int(before["rand_page_writes"])
+
+    def test_cascade_disk_delete_charges_io(self):
+        cfg, stt = filters.make("cascade", ram_q=8, p=26, fanout=2, levels=3)
+        keys = _keys(32, 256)
+        stt = filters.insert(cfg, stt, keys)  # 256 > cap0=192 -> collapsed
+        assert int(filters.stats(cfg, stt)["nonempty_levels"]) >= 1
+        assert int(stt.q0.n) == 0
+        before = filters.stats(cfg, stt)
+        stt = filters.delete(cfg, stt, keys[:64])
+        after = filters.stats(cfg, stt)
+        assert int(after["rand_page_reads"]) - int(before["rand_page_reads"]) == 64
+        assert int(after["rand_page_writes"]) - int(before["rand_page_writes"]) == 64
+        assert int(after["n"]) == 192
