@@ -75,11 +75,14 @@ def _mk_structs(ratio: int, n_total: int):
         bloom.BloomConfig(m_bits=m_bits, k=k), buffer_capacity_bits=ram_bits // 64
     )
     bbf = BufferedBloomFilter(
-        bloom.BloomConfig(m_bits=m_bits, k=k), ram_bytes=ram_bits // 8,
-        block_bytes=4096 * 8, page_bytes=512,
+        bloom.BloomConfig(m_bits=m_bits, k=k),
+        ram_bytes=ram_bits // 8,
+        block_bytes=4096 * 8,
+        page_bytes=512,
     )
     fbf = ForestBloomFilter(
-        bits_per_element=k / np.log(2), ram_bytes=ram_bits // 8,
+        bits_per_element=k / np.log(2),
+        ram_bytes=ram_bits // 8,
         total_elements=n_total,
     )
     return {"cf": cf, "bqf": bqf, "ebf": ebf, "bbf": bbf, "fbf": fbf}

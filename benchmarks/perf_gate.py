@@ -1,0 +1,126 @@
+"""CI perf-regression gate: compare a bench run against the committed baseline.
+
+Usage::
+
+    python -m benchmarks.run --only bench_resize,bench_incremental
+    python -m benchmarks.perf_gate            # compare + exit 1 on regression
+    python -m benchmarks.perf_gate --update   # refresh the committed baseline
+
+The committed baseline (``experiments/bench_baseline.json``) stores
+``us_per_call`` per benchmark row.  Absolute timings are machine-bound,
+so the gate is *relative*: it computes each shared row's
+current/baseline ratio, takes the median ratio as the machine-speed
+normalizer (a uniformly slower runner shifts every ratio equally), and
+fails only when a row regresses more than ``--threshold`` (default
+1.5x) beyond that normalizer — i.e. when one benchmark got slower
+*relative to the others*, which is what a code regression looks like.
+
+Rows present on only one side are reported but never fail the gate
+(new benchmarks land before their baseline; retired ones linger until
+the next ``--update``).  Commits whose message contains ``[perf-skip]``
+bypass the job entirely (wired in ``.github/workflows/ci.yml``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import statistics
+import sys
+
+BASELINE_PATH = os.path.join("experiments", "bench_baseline.json")
+RESULTS_PATH = os.path.join("experiments", "bench_results.csv")
+
+# rows the gate watches; keep in sync with the perf-gate CI job's --only
+GATED_PREFIXES = ("resize_", "incr_")
+
+
+def read_results(path: str) -> dict[str, float]:
+    rows: dict[str, float] = {}
+    with open(path) as f:
+        for rec in csv.DictReader(f):
+            name = rec["name"]
+            if name.startswith(GATED_PREFIXES):
+                rows[name] = float(rec["us_per_call"])
+    return rows
+
+
+def read_baseline(path: str) -> dict[str, float]:
+    with open(path) as f:
+        return {k: float(v) for k, v in json.load(f)["rows"].items()}
+
+
+def update_baseline(results: dict[str, float]) -> None:
+    payload = {
+        "comment": (
+            "CI perf-gate baseline (us_per_call). Refresh with "
+            "`python -m benchmarks.perf_gate --update` after an accepted "
+            "perf change; bypass one commit with [perf-skip]."
+        ),
+        "rows": {k: round(v, 3) for k, v in sorted(results.items())},
+    }
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"baseline refreshed: {len(results)} rows -> {BASELINE_PATH}")
+
+
+def compare(
+    current: dict[str, float], baseline: dict[str, float], threshold: float
+) -> int:
+    shared = sorted(set(current) & set(baseline))
+    if not shared:
+        print("perf-gate: no shared rows between results and baseline", file=sys.stderr)
+        return 1
+    ratios = {k: current[k] / baseline[k] for k in shared}
+    machine = statistics.median(ratios.values())
+    print(f"machine-speed normalizer (median ratio): {machine:.3f}")
+    print(f"{'row':40s} {'base_us':>12s} {'now_us':>12s} {'rel':>8s}")
+    failed = []
+    for k in shared:
+        rel = ratios[k] / machine
+        flag = ""
+        if rel > threshold:
+            failed.append(k)
+            flag = f"  REGRESSION (> {threshold:.2f}x)"
+        elif rel < 1 / threshold:
+            flag = "  (improved — consider --update)"
+        print(f"{k:40s} {baseline[k]:12.1f} {current[k]:12.1f} {rel:7.2f}x{flag}")
+    for k in sorted(set(current) - set(baseline)):
+        print(f"{k:40s} {'--':>12s} {current[k]:12.1f}      new (not gated)")
+    for k in sorted(set(baseline) - set(current)):
+        print(f"{k:40s} {baseline[k]:12.1f} {'--':>12s}      missing from run")
+    if failed:
+        print(
+            f"\nperf-gate FAILED: {len(failed)} row(s) regressed beyond "
+            f"{threshold:.2f}x relative to the machine normalizer: "
+            + ", ".join(failed),
+            file=sys.stderr,
+        )
+        return 1
+    print("\nperf-gate passed")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS_PATH)
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--threshold", type=float, default=1.5)
+    ap.add_argument(
+        "--update", action="store_true", help="rewrite the baseline from --results"
+    )
+    args = ap.parse_args()
+
+    current = read_results(args.results)
+    if args.update:
+        update_baseline(current)
+        return
+    baseline = read_baseline(args.baseline)
+    sys.exit(compare(current, baseline, args.threshold))
+
+
+if __name__ == "__main__":
+    main()

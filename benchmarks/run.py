@@ -1,10 +1,13 @@
 """Benchmark harness: one section per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
-Prints ``name,us_per_call,derived`` CSV rows (per the scaffold contract)
-and writes experiments/bench_results.csv incrementally — rows are
-appended and flushed as each module finishes, so one crashing bench
-cannot lose the rows of the modules that already completed.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]]
+``--only`` takes a comma-separated list of substrings; a module runs if
+any of them matches its name (e.g. ``--only bench_resize,bench_incremental``
+is what the CI perf gate runs).  Prints ``name,us_per_call,derived``
+CSV rows (per the scaffold contract) and writes
+experiments/bench_results.csv incrementally — rows are appended and
+flushed as each module finishes, so one crashing bench cannot lose the
+rows of the modules that already completed.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ MODULES = [
     "bench_occupancy",  # Fig 6
     "bench_fanout",     # Fig 9 / §5.3
     "bench_resize",     # §3 resizing: doubling vs rebuild + growth schedules
+    "bench_incremental",  # blocking vs amortized growth (the headline curve)
     "bench_kernels",    # Pallas kernels (interpret)
 ]
 
@@ -31,8 +35,9 @@ OUT_PATH = os.path.join("experiments", "bench_results.csv")
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, help="comma-separated name substrings")
     args = ap.parse_args()
+    wanted = [w for w in (args.only or "").split(",") if w]
 
     import importlib
 
@@ -42,7 +47,7 @@ def main() -> None:
         f.write("name,us_per_call,derived\n")
         f.flush()
         for modname in MODULES:
-            if args.only and args.only not in modname:
+            if wanted and not any(w in modname for w in wanted):
                 continue
             t0 = time.time()
             mod = importlib.import_module(f"benchmarks.{modname}")

@@ -18,7 +18,8 @@ def main():
     for i, batch in enumerate(pipe.batches(10, docs_per_step=512)):
         s = pipe.state
         print(
-            f"batch {i}: tokens {tuple(batch['tokens'].shape)} | corpus seen={s.docs_seen} "
+            f"batch {i}: tokens {tuple(batch['tokens'].shape)} | "
+            f"corpus seen={s.docs_seen} "
             f"kept={s.docs_kept} dropped(dup)={s.docs_dropped} "
             f"({100 * s.docs_dropped / max(s.docs_seen, 1):.1f}% dup rate)"
         )

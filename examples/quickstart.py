@@ -24,8 +24,12 @@ def main():
     st = filters.insert(cfg, st, keys[:40_000])
     print("QF load:", float(filters.stats(cfg, st)["load"]))
     print("all present:", bool(filters.contains(cfg, st, keys[:40_000]).all()))
-    absent = jnp.asarray(rng.integers(0, 2**32, 100_000, dtype=np.int64).astype(np.uint32))
-    print("fp rate:", float(filters.contains(cfg, st, absent).mean()), "~", 0.61 * 2**-12)
+    absent = jnp.asarray(
+        rng.integers(0, 2**32, 100_000, dtype=np.int64).astype(np.uint32)
+    )
+    print(
+        "fp rate:", float(filters.contains(cfg, st, absent).mean()), "~", 0.61 * 2**-12
+    )
     st = filters.delete(cfg, st, keys[:10_000])
     print("after delete:", int(filters.stats(cfg, st)["n"]))
 

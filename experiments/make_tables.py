@@ -44,14 +44,20 @@ def main():
     meshes = sorted({k[2] for k in data})
     for mesh in meshes:
         print(f"\n### Mesh {mesh}\n")
-        print("| arch | shape | hbm/dev GiB | fits | t_compute s | t_memory s | t_coll s | bound | useful-flop frac | roofline MFU |")
+        print(
+            "| arch | shape | hbm/dev GiB | fits | t_compute s | t_memory s "
+            "| t_coll s | bound | useful-flop frac | roofline MFU |"
+        )
         print("|---|---|---|---|---|---|---|---|---|---|")
         for (arch, shape, m), j in sorted(data.items()):
             if m != mesh:
                 continue
             c = fmt_cell(j)
             if c is None:
-                print(f"| {arch} | {shape} | — | — | — | — | — | skipped (full-attention; see DESIGN.md §5) | — | — |")
+                print(
+                    f"| {arch} | {shape} | — | — | — | — | — "
+                    "| skipped (full-attention; see DESIGN.md §5) | — | — |"
+                )
                 continue
             if c.get("status") == "ERROR":
                 print(f"| {arch} | {shape} | ERROR | | | | | | | |")

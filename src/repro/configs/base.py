@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
@@ -123,7 +123,12 @@ class ModelConfig:
                 d_in = self.ssm_expand * d
                 conv_dim = d_in + 2 * self.ssm_n_groups * self.ssm_d_state
                 return (
-                    d * (2 * d_in + 2 * self.ssm_n_groups * self.ssm_d_state + d_in // self.ssm_head_dim)
+                    d
+                    * (
+                        2 * d_in
+                        + 2 * self.ssm_n_groups * self.ssm_d_state
+                        + d_in // self.ssm_head_dim
+                    )
                     + conv_dim * self.ssm_d_conv
                     + d_in * d
                 )
@@ -171,7 +176,9 @@ def make_smoke(cfg: ModelConfig) -> ModelConfig:
         n_layers=min(cfg.n_layers, 4 if not cfg.block_pattern else 4),
         d_model=128,
         n_heads=4,
-        n_kv_heads=max(1, min(cfg.n_kv_heads, 4 * cfg.n_kv_heads // max(cfg.n_heads, 1)) or 1),
+        n_kv_heads=max(
+            1, min(cfg.n_kv_heads, 4 * cfg.n_kv_heads // max(cfg.n_heads, 1)) or 1
+        ),
         head_dim=32,
         d_ff=256 if cfg.d_ff else 0,
         vocab_size=512,

@@ -279,7 +279,9 @@ def _window_decode(cfg: QFConfig, state: QFState, fq, fr, W: int):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4))
-def lookup(cfg: QFConfig, state: QFState, fq: jnp.ndarray, fr: jnp.ndarray, window: int = 256):
+def lookup(
+    cfg: QFConfig, state: QFState, fq: jnp.ndarray, fr: jnp.ndarray, window: int = 256
+):
     """MAY-CONTAIN for a batch of fingerprints (paper Fig. 3, vectorized).
 
     Fast path: one contiguous ``2*window``-slot decode per query (the
@@ -475,6 +477,34 @@ def multi_merge(cfg_out: QFConfig, parts, build=None) -> QFState:
     # an input whose slack had overflowed may already have lost entries;
     # the union must keep reporting that (as qf.merge does)
     return out._replace(overflow=out.overflow | overflow)
+
+
+def merge_streams(aq, ar, na, bq, br, nb):
+    """Merge two lexicographically sorted fingerprint streams in O(n).
+
+    Both inputs follow the extract/_pad_sort convention: sorted valid
+    prefix (``na``/``nb`` entries) followed by sentinel padding.  The
+    output stream has length ``len(a) + len(b)`` with the ``na + nb``
+    valid entries sorted first — computed by rank arithmetic
+    (``searchsorted`` + scatter), skipping the ``lax.sort`` that
+    dominates ``multi_merge``.  Used by the incremental-resize finish
+    pass, where one input (the in-flight buffer) is much smaller than
+    the other (the freshly built table).
+    """
+    la, lb = aq.shape[0], bq.shape[0]
+    ia = jnp.arange(la, dtype=jnp.int32)
+    ib = jnp.arange(lb, dtype=jnp.int32)
+    # ties break a-before-b: a ranks 'left' into b, b ranks 'right' into a
+    ra = ia + lex_searchsorted(bq, br, aq, ar, "left")
+    rb = ib + lex_searchsorted(aq, ar, bq, br, "right")
+    # sentinel padding would collide: route it to the tail deterministically
+    ra = jnp.where(ia < na, ra, nb + ia)
+    rb = jnp.where(ib < nb, rb, la + ib)
+    out_q = jnp.full((la + lb,), INT32_MAX, jnp.int32)
+    out_r = jnp.full((la + lb,), UINT32_MAX, jnp.uint32)
+    out_q = out_q.at[ra].set(aq).at[rb].set(bq)
+    out_r = out_r.at[ra].set(ar).at[rb].set(br)
+    return out_q, out_r
 
 
 def resize(

@@ -15,13 +15,12 @@ dry-run (see tests/test_distributed.py for the 8-device functional run).
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import quotient_filter as qf
 

@@ -14,7 +14,7 @@ Stages: synthetic corpus -> digest -> CF dedup -> tokenize (hash stub)
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 import jax
@@ -28,13 +28,27 @@ class PipelineConfig:
     vocab_size: int = 32000
     seq_len: int = 1024
     batch_size: int = 8
-    dedup_ram_q: int = 16  # Q0 buckets of the cascade filter
+    dedup_family: str = "cascade"  # any registry family ("cascade", "qf", ...)
+    dedup_ram_q: int = 16  # Q0 buckets of the cascade filter (q for "qf")
     dedup_p: int = 30  # fingerprint bits (fp rate ~ n * 2^-p)
     dedup_fanout: int = 4
     dedup_levels: int = 3  # static disk-level depth of the cascade
+    dedup_chunk: int = 1024  # incremental-migration chunk (qf family)
     duplicate_fraction: float = 0.3  # synthetic corpus duplication rate
     doc_len_range: tuple = (64, 512)
     seed: int = 0
+
+    def dedup_spec(self) -> dict:
+        if self.dedup_family == "cascade":
+            return dict(
+                ram_q=self.dedup_ram_q,
+                p=self.dedup_p,
+                fanout=self.dedup_fanout,
+                levels=self.dedup_levels,
+            )
+        if self.dedup_family == "qf":
+            return dict(q=self.dedup_ram_q, r=self.dedup_p - self.dedup_ram_q)
+        raise ValueError(f"no dedup spec mapping for {self.dedup_family!r}")
 
 
 @dataclass
@@ -80,11 +94,7 @@ class DedupPipeline:
         self.cfg = cfg
         self.corpus = SyntheticCorpus(cfg)
         self.filter_cfg, self.filter_state = filters.make(
-            "cascade",
-            ram_q=cfg.dedup_ram_q,
-            p=cfg.dedup_p,
-            fanout=cfg.dedup_fanout,
-            levels=cfg.dedup_levels,
+            cfg.dedup_family, **cfg.dedup_spec()
         )
         self.state = PipelineState()
 
@@ -95,10 +105,15 @@ class DedupPipeline:
         wins), exactly like a streaming crawler would.  The insert uses
         a fixed-shape padded batch with a valid count, so the jitted
         filter step compiles once per docs_per_step.  Ingest goes
-        through ``filters.auto_grow``: when the cascade's bottom level
-        approaches saturation the level stack deepens in place, so the
-        pipeline never has to size the dedup filter for the corpus up
-        front (``dedup_levels`` is just the starting depth)."""
+        through ``filters.auto_scale``: growth is incremental where the
+        family supports it (a flat-QF dedup filter migrates one bounded
+        chunk per batch instead of re-streaming the whole table under
+        one insert — mid-migration the cfg/state pair is the opaque
+        migrating wrapper, and snapshots taken then restore and resume
+        the migration), a cascade deepens its level stack in place, and
+        the low watermark shrinks any of them back after heavy deletes.
+        The pipeline never has to size the dedup filter for the corpus
+        up front."""
         keys = jnp.asarray(doc_ids, jnp.uint32)
         seen = np.asarray(filters.contains(self.filter_cfg, self.filter_state, keys))
         _, first_idx = np.unique(doc_ids, return_index=True)
@@ -109,11 +124,12 @@ class DedupPipeline:
             kept = doc_ids[keep]
             padded = np.zeros(len(doc_ids), np.uint32)
             padded[: len(kept)] = kept
-            self.filter_cfg, self.filter_state = filters.auto_grow(
+            self.filter_cfg, self.filter_state = filters.auto_scale(
                 self.filter_cfg,
                 self.filter_state,
                 jnp.asarray(padded),
                 k=int(keep.sum()),
+                chunk=self.cfg.dedup_chunk,
             )
         return keep
 
@@ -152,29 +168,48 @@ class DedupPipeline:
     def snapshot(self) -> dict:
         """Filter state is one pytree: flatten to np leaves (pickles cleanly).
 
-        The filter config rides along (as a plain tuple) because
-        ``auto_grow`` may have deepened the cascade since construction —
-        a restore must rebuild the grown geometry, not the configured
-        starting one."""
+        The filter config rides along (the NamedTuple itself — plain
+        ints/floats/strings, pickles cleanly) because ``auto_scale``
+        may have grown, shrunk, or mid-migrated the structure since
+        construction — a restore must rebuild the *current* geometry,
+        including an in-flight incremental-resize migration, not the
+        configured starting one."""
         leaves = jax.tree_util.tree_leaves(self.filter_state)
         return {
             "docs_seen": self.state.docs_seen,
             "docs_kept": self.state.docs_kept,
             "docs_dropped": self.state.docs_dropped,
-            "filter_cfg": tuple(self.filter_cfg),
-            "filter_leaves": [np.asarray(l) for l in leaves],
+            "filter_cfg": self.filter_cfg,
+            "filter_leaves": [np.asarray(leaf) for leaf in leaves],
         }
+
+    @staticmethod
+    def _blank_state(cfg):
+        """An all-zero filter state with ``cfg``'s shapes (any family,
+        including the in-flight migration wrapper)."""
+        from repro.filters import incremental_resize
+
+        if incremental_resize.is_migrating(cfg):
+            return incremental_resize.blank(cfg)
+        _, state = filters.make(filters.by_cfg(cfg).name, **cfg._asdict())
+        return state
 
     def restore(self, snap: dict) -> None:
         self.state.docs_seen = int(snap["docs_seen"])
         self.state.docs_kept = int(snap["docs_kept"])
         self.state.docs_dropped = int(snap["docs_dropped"])
-        spec = snap.get("filter_cfg")
-        if spec is not None and tuple(spec) != tuple(self.filter_cfg):
-            cfg = type(self.filter_cfg)(*spec)
-            self.filter_cfg, self.filter_state = filters.make(
-                "cascade", **cfg._asdict()
-            )
+        cfg = snap.get("filter_cfg")
+        if cfg is not None and not hasattr(cfg, "_fields"):
+            # legacy (pre-PR4) snapshots stored tuple(cfg): reconstruct
+            # as this pipeline's config type
+            cfg = type(self.filter_cfg)(*cfg)
+        if cfg is not None and (
+            type(cfg) is not type(self.filter_cfg) or cfg != self.filter_cfg
+        ):
+            # build the blank state BEFORE touching self, so an invalid
+            # snapshot cannot leave the pipeline half-restored
+            state = self._blank_state(cfg)
+            self.filter_cfg, self.filter_state = cfg, state
         cur = jax.tree_util.tree_leaves(self.filter_state)
         new = snap["filter_leaves"]
         if len(cur) != len(new) or any(
@@ -182,9 +217,9 @@ class DedupPipeline:
         ):
             raise ValueError(
                 "snapshot filter state does not match this pipeline's dedup "
-                "config (ram_q/p/fanout/levels changed?) — refusing to restore"
+                "config (family/geometry changed?) — refusing to restore"
             )
         treedef = jax.tree_util.tree_structure(self.filter_state)
         self.filter_state = jax.tree_util.tree_unflatten(
-            treedef, [jnp.asarray(l) for l in new]
+            treedef, [jnp.asarray(leaf) for leaf in new]
         )

@@ -47,6 +47,15 @@ Quickstart::
     for batch in stream:                            # unbounded stream
         cfg, state = filters.auto_grow(cfg, state, batch)
 
+    # ...or, for long-running consumers, ``auto_scale``: growth happens
+    # *incrementally* (each batch moves one bounded chunk of quotient
+    # runs into the wider table — no stop-the-world re-stream; see
+    # ``filters.incremental_resize``) and a low-watermark ``shrink``
+    # reclaims capacity when the population falls, with hysteresis so
+    # the structure never thrashes between the two:
+    for batch in stream:
+        cfg, state = filters.auto_scale(cfg, state, batch)
+
 A ``backend="pallas"`` spec field on the QF-family filters routes the
 bandwidth-bound build/probe passes through the Pallas TPU kernels in
 ``repro.kernels`` (interpret mode on CPU).  ``probe`` is ``contains``
@@ -58,7 +67,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from . import bloom_filter, buffered, cascade, iostats, qf_filter, sharded  # noqa: F401 (registration)
+from . import (  # noqa: F401 (registration side effects)
+    bloom_filter,
+    buffered,
+    cascade,
+    incremental_resize,
+    iostats,
+    qf_filter,
+    sharded,
+)
+from .auto_scale import auto_scale, settle
 from .iostats import IOCounters, to_iolog
 from .registry import FilterImpl, by_cfg, by_name, names, register
 
@@ -156,6 +174,38 @@ def resize(cfg, state, **kw):
     return impl.resize(cfg, state, **kw)
 
 
+def needs_shrink(cfg, state):
+    """Device predicate: is the filter far enough under its low
+    watermark that one structural halving step is safe?
+
+    The mirror image of :func:`needs_resize` — jittable, cheap, and
+    deliberately conservative: each family's predicate only fires when
+    the population fits the *shrunk* structure at a comfortable margin
+    (``shrink_load`` on the config), which is the hysteresis band that
+    keeps ``auto_scale`` from thrashing between grow and shrink.
+    Filters without a shrink binding report a constant False.
+    """
+    impl = by_cfg(cfg)
+    if impl.needs_shrink is None:
+        return jnp.zeros((), jnp.bool_)
+    return impl.needs_shrink(cfg, state)
+
+
+def shrink(cfg, state):
+    """One canonical halving step: ``(cfg, state) -> (cfg, state)``.
+
+    Per family: qf re-merges a quotient bit into the remainder (the fp
+    rate improves), buffered_qf re-streams its disk QF one bit
+    narrower, cascade pops an empty deepest level, sharded_qf
+    redistributes shard pairs and halves the shard count, bloom folds
+    its doubled cell tiling back together.  Host-level — shapes change.
+    """
+    impl = by_cfg(cfg)
+    if impl.shrink is None:
+        raise NotImplementedError(f"{impl.name} does not support shrink")
+    return impl.shrink(cfg, state)
+
+
 def auto_grow(cfg, state, keys, k=None, max_steps: int = 32):
     """Insert with automatic growth: the dynamic-resizing ingest driver.
 
@@ -195,7 +245,8 @@ def auto_grow(cfg, state, keys, k=None, max_steps: int = 32):
 
 def supports(name_or_cfg, op: str) -> bool:
     """Does filter ``name_or_cfg`` implement optional op ``"delete"`` /
-    ``"merge"`` / ``"resize"`` / ``"grow"`` / ``"needs_resize"``?
+    ``"merge"`` / ``"resize"`` / ``"grow"`` / ``"needs_resize"`` /
+    ``"needs_shrink"`` / ``"shrink"``?
 
     Passing a cfg instance gives the config-exact answer (e.g. delete on
     a plain non-counting Bloom is False); a name answers for the family.
@@ -212,20 +263,25 @@ __all__ = [
     "FilterImpl",
     "IOCounters",
     "auto_grow",
+    "auto_scale",
     "by_cfg",
     "by_name",
     "contains",
     "delete",
     "grow",
+    "incremental_resize",
     "insert",
     "iostats",
     "make",
     "merge",
     "names",
     "needs_resize",
+    "needs_shrink",
     "probe",
     "register",
     "resize",
+    "settle",
+    "shrink",
     "stats",
     "supports",
     "to_iolog",

@@ -1,0 +1,141 @@
+"""``auto_scale`` — the watermark-driven ingest/serving driver.
+
+``auto_grow`` only ever ratchets capacity up, and it does so with the
+blocking one-pass ``grow``.  This driver supersedes it for long-running
+consumers (``data.pipeline``, ``serve.prefix_cache``):
+
+* **up**, incrementally where the family supports it: when the high
+  watermark (``needs_resize``) trips on a flat QF, the driver opens an
+  :mod:`incremental_resize` migration instead of re-streaming the whole
+  table under one insert — subsequent batches each move one bounded
+  chunk, and the driver collapses the migration when its device
+  predicate reports drained.  Families without an incremental path
+  (layered/bloom/sharded) keep the blocking ``grow`` settle loop.
+* **down**, on the low watermark: ``needs_shrink`` predicates encode
+  per-family hysteresis (shrink only when the population fits the
+  *shrunk* structure at a comfortable margin, ``shrink_load`` of its
+  capacity), so a serving cache oscillating around a boundary never
+  thrashes between grow and shrink: after a shrink the count must grow
+  by ``1/shrink_load`` before the high watermark can trip, and after a
+  grow it must fall below ``shrink_load/2`` of the new capacity before
+  the low watermark can.
+
+Like ``auto_grow``, each predicate evaluation is one device->host sync,
+so this is the host-driven ingest cadence; fully on-device ``lax.scan``
+loops keep a static size by construction.
+"""
+
+from __future__ import annotations
+
+from . import incremental_resize
+from .qf_filter import QFilterConfig
+from .registry import by_cfg
+
+
+def _settle_up(impl, cfg, state, max_steps: int):
+    for _ in range(max_steps):
+        if not bool(impl.needs_resize(cfg, state)):
+            return cfg, state
+        cfg, state = impl.grow(cfg, state)
+    raise RuntimeError(
+        f"{impl.name}: still over capacity after {max_steps} grow steps"
+    )
+
+
+def _settle_down(impl, cfg, state, max_steps: int):
+    for _ in range(max_steps):
+        if not bool(impl.needs_shrink(cfg, state)):
+            return cfg, state
+        cfg, state = impl.shrink(cfg, state)
+    return cfg, state
+
+
+def auto_scale(
+    cfg,
+    state,
+    keys,
+    k=None,
+    *,
+    incremental: bool = True,
+    chunk: int = 1024,
+    buf_q: int | None = None,
+    shrink: bool = True,
+    max_steps: int = 32,
+):
+    """Insert with watermark-driven growth AND shrinkage.
+
+    Returns the new ``(cfg, state)`` pair; callers must carry both —
+    mid-migration the pair is the opaque migrating wrapper, still
+    answering ``insert``/``contains``/``stats`` through the façade.
+    """
+    if incremental_resize.is_migrating(cfg):
+        impl = by_cfg(cfg)
+        # a batch the side buffer cannot absorb would overflow INSIDE the
+        # insert (the post-insert settle below comes too late): collapse
+        # the migration first and take the plain-filter path instead
+        kb = int(keys.shape[0] if k is None else k)
+        if kb + int(state.buf.n) > cfg.buf.core.capacity:
+            cfg, state = incremental_resize.finish(cfg, state)
+            return auto_scale(
+                cfg,
+                state,
+                keys,
+                k,
+                incremental=incremental,
+                chunk=chunk,
+                buf_q=buf_q,
+                shrink=shrink,
+                max_steps=max_steps,
+            )
+        state = impl.insert(cfg, state, keys, k)
+        if bool(incremental_resize.needs_settle(cfg, state)):
+            cfg, state = incremental_resize.finish(cfg, state)
+        return cfg, state
+
+    impl = by_cfg(cfg)
+    can_up = impl.needs_resize is not None and impl.grow is not None
+    use_incremental = incremental and isinstance(cfg, QFilterConfig)
+
+    if can_up and bool(impl.needs_resize(cfg, state)):
+        if use_incremental:
+            cfg, state = incremental_resize.begin(
+                cfg, state, chunk=chunk, buf_q=buf_q
+            )
+            return auto_scale(
+                cfg,
+                state,
+                keys,
+                k,
+                incremental=incremental,
+                chunk=chunk,
+                buf_q=buf_q,
+                shrink=shrink,
+                max_steps=max_steps,
+            )
+        cfg, state = _settle_up(impl, cfg, state, max_steps)
+
+    state = impl.insert(cfg, state, keys, k)
+
+    if can_up and bool(impl.needs_resize(cfg, state)):
+        if use_incremental:
+            return incremental_resize.begin(cfg, state, chunk=chunk, buf_q=buf_q)
+        cfg, state = _settle_up(impl, cfg, state, max_steps)
+    elif (
+        shrink
+        and impl.needs_shrink is not None
+        and impl.shrink is not None
+        and bool(impl.needs_shrink(cfg, state))
+    ):
+        cfg, state = _settle_down(impl, cfg, state, max_steps)
+    return cfg, state
+
+
+def settle(cfg, state):
+    """Collapse an in-flight migration, if any (host-level, blocking).
+
+    Call before operations the migrating wrapper does not support
+    (``delete``, ``merge``) or before serializing a long-lived filter
+    at a structural boundary."""
+    if incremental_resize.is_migrating(cfg):
+        return incremental_resize.finish(cfg, state)
+    return cfg, state

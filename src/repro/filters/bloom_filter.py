@@ -47,6 +47,7 @@ class BloomFilterConfig(NamedTuple):
     k: int
     seed: int = 0
     counting: bool = False
+    shrink_load: float = 0.4  # low watermark vs the folded (halved) tiling
 
     @property
     def core(self) -> bloom.BloomConfig:
@@ -61,6 +62,7 @@ class BlockedBloomConfig(NamedTuple):
     block_bits: int = 4096 * 8  # one 4 KiB page per key
     seed: int = 0
     counting: bool = False
+    shrink_load: float = 0.4  # low watermark vs the folded (halved) tiling
 
     @property
     def n_blocks(self) -> int:
@@ -180,13 +182,54 @@ def make_impl(cfg_cls, name: str, paper_section: str):
             factor //= 2
         return cfg, state
 
+    def _can_fold(cfg) -> bool:
+        # folding halves the tiling: need an even cell count and a
+        # remaining array the hash arithmetic can still index
+        cells = _cells(cfg)
+        if isinstance(cfg, BlockedBloomConfig):
+            return cfg.n_blocks >= 2 and cfg.n_blocks % 2 == 0
+        return cells % 2 == 0 and cells // 2 >= max(64, cfg.k)
+
+    def needs_shrink(cfg, state):
+        if not _can_fold(cfg):
+            return jnp.zeros((), jnp.bool_)
+        half_capacity = max(1, int(_cells(cfg) // 2 * math.log(2) / cfg.k))
+        return state.n <= jnp.int32(cfg.shrink_load * half_capacity)
+
+    def shrink(cfg, state):
+        """Halve the cell array by folding the two tiles together —
+        the exact inverse of ``grow``'s tiling: ``h mod m`` and
+        ``h mod 2m`` agree mod ``m``, so OR-ing (or adding, for
+        counting cells) the halves preserves every stored key: no
+        false negatives, and a counter still bounds the true count.
+        Old keys' fill concentrates (fp rate worsens toward the
+        pre-growth point); the count-based predicate keeps that inside
+        the design envelope."""
+        if not _can_fold(cfg):
+            raise ValueError(f"{name}: cell tiling cannot fold below this size")
+        half = _cells(cfg) // 2
+        lo, hi = state.cells[:half], state.cells[half:]
+        if cfg.counting:
+            folded = jnp.minimum(
+                lo.astype(jnp.uint32) + hi.astype(jnp.uint32), jnp.uint32(0xFFFF)
+            ).astype(jnp.uint16)
+        else:
+            folded = jnp.maximum(lo, hi)
+        if isinstance(cfg, BloomFilterConfig):
+            new_cfg = cfg._replace(m_bits=half)
+        else:
+            new_cfg = cfg._replace(m_bits=(cfg.n_blocks // 2) * cfg.block_bits)
+        return new_cfg, state._replace(cells=folded)
+
     def stats(cfg, state):
         return {
             "n": state.n,
             "cells_set": jnp.sum((state.cells > 0).astype(jnp.int32)),
             "fill": jnp.mean((state.cells > 0).astype(jnp.float32)),
             "load": state.n.astype(jnp.float32) / _capacity(cfg),
-            "size_bytes": cfg.size_bytes if hasattr(cfg, "size_bytes") else cfg.core.size_bytes,
+            "size_bytes": cfg.size_bytes
+            if hasattr(cfg, "size_bytes")
+            else cfg.core.size_bytes,
         }
 
     return register(
@@ -203,6 +246,8 @@ def make_impl(cfg_cls, name: str, paper_section: str):
             needs_resize=needs_resize,
             grow=grow,
             resize=resize,
+            needs_shrink=needs_shrink,
+            shrink=shrink,
             can_delete=lambda cfg: cfg.counting,  # plain bits can't unset
         )
     )

@@ -32,20 +32,26 @@ class BufferedQFConfig(NamedTuple):
     seed: int = 0
     max_load: float = 0.75
     backend: str = "reference"
+    shrink_load: float = 0.4  # low watermark vs the halved disk QF
 
     @property
     def ram(self) -> qf.QFConfig:
         return qf.QFConfig(
-            q=self.ram_q, r=self.p - self.ram_q, slack=self.slack,
-            seed=self.seed, max_load=self.max_load,
+            q=self.ram_q,
+            r=self.p - self.ram_q,
+            slack=self.slack,
+            seed=self.seed,
+            max_load=self.max_load,
         )
 
     @property
     def disk(self) -> qf.QFConfig:
         return qf.QFConfig(
-            q=self.disk_q, r=self.p - self.disk_q,
+            q=self.disk_q,
+            r=self.p - self.disk_q,
             slack=self.disk_slack or self.slack,
-            seed=self.seed, max_load=self.max_load,
+            seed=self.seed,
+            max_load=self.max_load,
         )
 
 
@@ -203,6 +209,24 @@ def grow(cfg: BufferedQFConfig, state):
     return resize(cfg, state, cfg.disk_q + 1)
 
 
+def needs_shrink(cfg: BufferedQFConfig, state):
+    """Device predicate: the disk population fits the halved disk QF at
+    the low watermark — one narrower re-stream reclaims half the flash."""
+    if cfg.disk_q - 1 <= cfg.ram_q:
+        return jnp.zeros((), jnp.bool_)
+    halved = cfg.disk._replace(q=cfg.disk_q - 1, r=cfg.disk.r + 1)
+    return state.disk.n <= jnp.int32(cfg.shrink_load * halved.capacity)
+
+
+def shrink(cfg: BufferedQFConfig, state):
+    """One halving step of the disk QF (re-merge a remainder bit)."""
+    if cfg.disk_q - 1 <= cfg.ram_q:
+        raise ValueError(
+            f"cannot shrink disk_q={cfg.disk_q}: must stay above ram_q={cfg.ram_q}"
+        )
+    return resize(cfg, state, cfg.disk_q - 1)
+
+
 def stats(cfg: BufferedQFConfig, state):
     return {
         "n": state.ram.n + state.disk.n,
@@ -229,5 +253,7 @@ IMPL = register(
         needs_resize=needs_resize,
         grow=grow,
         resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
     )
 )

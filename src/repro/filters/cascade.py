@@ -48,6 +48,7 @@ class CascadeConfig(NamedTuple):
     seed: int = 0
     max_load: float = 0.75
     backend: str = "reference"
+    shrink_load: float = 0.5  # low watermark vs the one-shallower stack
 
     @property
     def lb(self) -> int:
@@ -55,8 +56,11 @@ class CascadeConfig(NamedTuple):
 
     def _cfg(self, q: int) -> qf.QFConfig:
         return qf.QFConfig(
-            q=q, r=self.p - q, slack=max(1024, (1 << q) // 64),
-            seed=self.seed, max_load=self.max_load,
+            q=q,
+            r=self.p - q,
+            slack=max(1024, (1 << q) // 64),
+            seed=self.seed,
+            max_load=self.max_load,
         )
 
     @property
@@ -339,6 +343,38 @@ def grow(cfg: CascadeConfig, state):
     )
 
 
+def needs_shrink(cfg: CascadeConfig, state):
+    """Device predicate: the deepest level is empty AND the rest of the
+    hierarchy (with Q0 at its worst-case design fill, mirroring
+    ``needs_resize``) fits the one-shallower stack at the low
+    watermark — popping the level then cannot immediately re-trip
+    ``needs_resize``."""
+    if cfg.levels <= 1:
+        return jnp.zeros((), jnp.bool_)
+    ns = jnp.stack([s.n for s in state.levels])
+    q0_worst = jnp.maximum(state.q0.n, jnp.int32(cfg.q0_cfg.capacity))
+    total = q0_worst + jnp.sum(ns)
+    fits = total <= jnp.int32(
+        cfg.shrink_load * cfg.level_cfg(cfg.levels - 2).capacity
+    )
+    return (state.levels[-1].n == 0) & fits
+
+
+def shrink(cfg: CascadeConfig, state):
+    """Pop the (empty) deepest level — the inverse of ``grow``, and
+    like it free: no data moves, only the static stack depth changes."""
+    if cfg.levels <= 1:
+        raise ValueError("cannot shrink a single-level cascade")
+    if int(state.levels[-1].n) != 0:
+        raise ValueError("deepest level is non-empty; collapse/delete first")
+    new_cfg = cfg._replace(levels=cfg.levels - 1)
+    return new_cfg, CascadeState(
+        q0=state.q0,
+        levels=state.levels[:-1],
+        io=state.io._replace(resizes=state.io.resizes + 1),
+    )
+
+
 def resize(cfg: CascadeConfig, state, levels: int = None, fanout: int = None):
     """Re-shape the hierarchy: deepen the stack and/or widen the fanout.
 
@@ -427,5 +463,7 @@ IMPL = register(
         needs_resize=needs_resize,
         grow=grow,
         resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
     )
 )

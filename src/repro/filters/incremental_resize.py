@@ -1,0 +1,333 @@
+"""Incremental (amortized) resize: growth without the stop-the-world pass.
+
+``resize``/``grow`` on the QF family re-streams the whole table in one
+blocking device pass — exactly the "giant rebuild" the paper tells
+flash stores to avoid.  This module amortizes that pass: ``begin``
+freezes the old structure as its decoded sorted fingerprint stream (a
+QF *is* a sorted multiset, §3) and allocates the wider table empty;
+every subsequent ``insert`` then moves one bounded chunk of quotient
+runs across and ``contains`` consults both structures, so no single
+operation ever pays more than a chunk.
+
+The key structural fact making the chunk step O(chunk) instead of
+O(table): requotienting is monotone, so the migration stream arrives in
+the *new* table's sorted order and the new planes are built strictly
+left to right by ``kernels.ops.build_chunk`` — a carried ``cummax``
+scan plus a handful of scattered slot writes, never a rebuild.  Fresh
+inserts that arrive mid-migration cannot enter the frozen prefix, so
+they land in a small side-buffer QF (the paper's RAM-buffer trick from
+§4 applied to resizing); ``finish`` folds the buffer in with one
+sort-free two-stream merge once the source is drained.
+
+The in-flight migration is itself a registered (non-public) filter: the
+façade's ``insert``/``contains``/``stats`` dispatch on
+:class:`MigratingQFConfig` like any other family, so ingest drivers and
+serving callers hold an opaque ``(cfg, state)`` pair throughout.  All
+per-batch work is jittable device arithmetic — the only host decisions
+(start a migration, collapse it when done) live in the
+``filters.auto_scale`` driver, at the same one-sync-per-batch cadence
+as ``auto_grow``.
+
+Membership is exact at every cursor position: entries ``[0, cursor)``
+of the stream live in the new planes, entries ``[cursor, n)`` answer
+from a binary search of the frozen stream suffix, and mid-migration
+inserts answer from the buffer — ``contains`` is the OR of the three,
+so there are no false negatives (and no extra false positives either:
+all three hold disjoint slices of one fingerprint multiset).
+
+I/O accounting: each chunk charges its own chunk-sized sequential read
+(old layout) and write (new layout) plus a ``migrate_chunks`` tick in
+:class:`IOCounters` — the paper's amortized re-stream schedule, charged
+where it happens instead of as one spike.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from repro.kernels import ops as kops
+
+from . import iostats, qf_filter
+from .iostats import IOCounters
+from .qf_filter import QFilterConfig
+from .registry import FilterImpl, register
+
+
+class MigratingQFConfig(NamedTuple):
+    """Static config of an in-flight QF migration (jit-static, hashable)."""
+
+    src: QFilterConfig  # old geometry (the frozen stream's split)
+    dst: QFilterConfig  # wider geometry being built left-to-right
+    buf: QFilterConfig  # small side buffer absorbing fresh inserts
+    chunk: int = 1024  # entries moved per insert batch
+
+
+class MigrationState(NamedTuple):
+    """Device state: frozen source stream + partial target + buffer."""
+
+    src_fq: jnp.ndarray  # int32[src_slots] sorted quotients (src split)
+    src_fr: jnp.ndarray  # uint32[src_slots] matching remainders
+    src_n: jnp.ndarray  # int32 scalar: valid prefix of the stream
+    cursor: jnp.ndarray  # int32 scalar: entries [cursor, src_n) still pending
+    dst: qf.QFState  # holds exactly the entries [0, cursor)
+    last_pos: jnp.ndarray  # int32 carry for build_chunk (-1 initially)
+    last_fq: jnp.ndarray  # int32 carry for build_chunk (-1 initially)
+    buf: qf.QFState  # fresh inserts that arrived mid-migration
+    io: IOCounters
+
+
+def _default_buf_q(cfg: QFilterConfig) -> int:
+    # 8x smaller than the source table (floor 2^8): buffer ops stay well
+    # under the table cost, and fresh inserts arriving at up to chunk/8
+    # keys per batch fit for the whole drain (the driver settles early
+    # on the buffer-full predicate if a workload outruns that)
+    return max(8, cfg.q - 3)
+
+
+def begin(
+    cfg: QFilterConfig,
+    state: qf.QFState,
+    new_q: int | None = None,
+    chunk: int = 1024,
+    buf_q: int | None = None,
+):
+    """Freeze ``(cfg, state)`` and open a migration to ``new_q`` bits.
+
+    Host-level (allocates the wider planes and the stream arrays) but
+    cheap: one decode pass over the old table — no sort, no rebuild.
+    Returns the opaque ``(MigratingQFConfig, MigrationState)`` pair.
+    """
+    if new_q is None:
+        new_q = cfg.q + 1
+    new_r = cfg.q + cfg.r - new_q
+    if not (cfg.q < new_q <= 30 and new_r >= 1):
+        raise ValueError(
+            f"cannot migrate q={cfg.q} to q={new_q} within p={cfg.q + cfg.r}"
+        )
+    if chunk < 1:
+        raise ValueError("chunk must be positive")
+    if buf_q is None:
+        buf_q = _default_buf_q(cfg)
+    dst = cfg._replace(q=new_q, r=new_r)
+    buf = cfg._replace(q=buf_q, r=cfg.q + cfg.r - buf_q)
+    mcfg = MigratingQFConfig(src=cfg, dst=dst, buf=buf, chunk=chunk)
+    src_fq, src_fr, src_n = qf.extract(cfg.core, state)
+    io = iostats.zeros()._replace(resizes=jnp.ones((), jnp.int32))
+    ms = MigrationState(
+        src_fq=src_fq,
+        src_fr=src_fr,
+        src_n=src_n,
+        cursor=jnp.zeros((), jnp.int32),
+        dst=qf.empty(dst.core)._replace(overflow=state.overflow),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        buf=qf.empty(buf.core),
+        io=io,
+    )
+    return mcfg, ms
+
+
+def blank(mcfg: MigratingQFConfig) -> MigrationState:
+    """An all-zero state with this config's shapes (snapshot restore)."""
+    t = mcfg.src.core.total_slots
+    return MigrationState(
+        src_fq=jnp.full((t,), qf.INT32_MAX, jnp.int32),
+        src_fr=jnp.full((t,), qf.UINT32_MAX, jnp.uint32),
+        src_n=jnp.zeros((), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        dst=qf.empty(mcfg.dst.core),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        buf=qf.empty(mcfg.buf.core),
+        io=iostats.zeros(),
+    )
+
+
+def is_migrating(cfg) -> bool:
+    return isinstance(cfg, MigratingQFConfig)
+
+
+def _advance(mcfg: MigratingQFConfig, ms: MigrationState, steps: int = 1):
+    """Move up to ``steps * chunk`` pending entries into the new planes.
+
+    Pure device arithmetic with static shapes: a no-op (masked) once the
+    stream is drained, so it is safe to call unconditionally per batch.
+    """
+    src, dst = mcfg.src.core, mcfg.dst.core
+    for _ in range(steps):
+        C = mcfg.chunk
+        idx = ms.cursor + jnp.arange(C, dtype=jnp.int32)
+        valid = idx < ms.src_n
+        gi = jnp.clip(idx, 0, ms.src_fq.shape[0] - 1)
+        fq = jnp.where(valid, ms.src_fq[gi], qf.INT32_MAX)
+        fr = jnp.where(valid, ms.src_fr[gi], qf.UINT32_MAX)
+        fq, fr = qf._requotient(fq, fr, src, dst)
+        moved = jnp.sum(valid, dtype=jnp.int32)
+        new_dst, last_pos, last_fq = kops.build_chunk(
+            dst, ms.dst, fq, fr, moved, ms.last_pos, ms.last_fq
+        )
+        io = ms.io._replace(
+            seq_read_bytes=ms.io.seq_read_bytes
+            + moved.astype(jnp.float32) * (src.bits_per_slot / 8.0),
+            seq_write_bytes=ms.io.seq_write_bytes
+            + moved.astype(jnp.float32) * (dst.bits_per_slot / 8.0),
+            migrate_chunks=ms.io.migrate_chunks + (moved > 0).astype(jnp.int32),
+        )
+        ms = ms._replace(
+            cursor=ms.cursor + moved,
+            dst=new_dst,
+            last_pos=last_pos,
+            last_fq=last_fq,
+            io=io,
+        )
+    return ms
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _insert_step(mcfg: MigratingQFConfig, ms: MigrationState, keys, kk):
+    ms = _advance(mcfg, ms)
+    buf = qf_filter.insert_keys(mcfg.buf.core, mcfg.buf.backend, ms.buf, keys, kk)
+    return ms._replace(buf=buf)
+
+
+def insert(mcfg: MigratingQFConfig, ms: MigrationState, keys, k=None):
+    """Migrate one chunk, then land the fresh keys in the side buffer.
+
+    One fused jitted step with the state donated (XLA updates the
+    partially built planes in place where the backend supports it), so
+    the per-batch cost during a migration is the chunk move plus a
+    small-buffer insert — never a full-table pass.  As with any donated
+    op, callers must use the returned state, not the argument.
+
+    Like any fixed-size QF, a batch exceeding the side buffer's slack
+    trips its ``overflow`` flag (surfaced through ``stats`` and
+    propagated by :func:`finish`) rather than growing mid-step;
+    ``auto_scale`` settles the migration *before* inserting any batch
+    the buffer could not absorb, so driver-fed ingest never gets there.
+    """
+    kk = jnp.asarray(keys.shape[0] if k is None else k, jnp.int32)
+    return _insert_step(mcfg, ms, keys, kk)
+
+
+def _suffix_hit(ms: MigrationState, fq, fr):
+    """Does the not-yet-migrated stream suffix hold this fingerprint?"""
+    lo = qf.lex_searchsorted(ms.src_fq, ms.src_fr, fq, fr, "left")
+    hi = qf.lex_searchsorted(ms.src_fq, ms.src_fr, fq, fr, "right")
+    return hi > jnp.maximum(lo, ms.cursor)
+
+
+def contains(mcfg: MigratingQFConfig, ms: MigrationState, keys):
+    """MAY-CONTAIN across all three slices — no false negatives at any
+    cursor position (the migrated prefix answers from the new planes,
+    the pending suffix from the stream, fresh keys from the buffer)."""
+    fq_s, fr_s = qf.fingerprints(mcfg.src.core, keys)
+    hit = _suffix_hit(ms, fq_s, fr_s)
+    hit = hit | qf_filter.contains_keys(
+        mcfg.dst.core, mcfg.dst.backend, ms.dst, keys, mcfg.dst.window
+    )
+    return hit | qf_filter.contains_keys(
+        mcfg.buf.core, mcfg.buf.backend, ms.buf, keys, mcfg.buf.window
+    )
+
+
+def migration_done(mcfg: MigratingQFConfig, ms: MigrationState):
+    """Device predicate: the frozen stream is fully drained."""
+    return ms.cursor >= ms.src_n
+
+
+def needs_settle(mcfg: MigratingQFConfig, ms: MigrationState):
+    """Device predicate: the host should call :func:`finish` now —
+    either the stream is drained or the side buffer is approaching its
+    own capacity (fresh inserts outran the migration)."""
+    buf_full = ms.buf.n >= jnp.int32(mcfg.buf.core.capacity)
+    return migration_done(mcfg, ms) | buf_full
+
+
+def finish(mcfg: MigratingQFConfig, ms: MigrationState):
+    """Collapse the migration into a plain ``(cfg, state)`` QF pair.
+
+    Drains any pending stream entries (bounded chunks, usually zero by
+    the time the driver calls this), then folds the side buffer in with
+    one sort-free two-stream merge — O(table) scatter work, skipping
+    the O(table log table) sort a blocking resize pays.
+    """
+    pending = int(ms.src_n - ms.cursor)
+    if pending > 0:
+        ms = _advance(mcfg, ms, steps=-(-pending // mcfg.chunk))
+    dst_core = mcfg.dst.core
+    if int(ms.buf.n) == 0:
+        state = ms.dst
+    else:
+        dq, dr, dn = qf.extract(dst_core, ms.dst)
+        bq, br, bn = qf.extract(mcfg.buf.core, ms.buf)
+        bq, br = qf._requotient(bq, br, mcfg.buf.core, dst_core)
+        allq, allr = qf.merge_streams(dq, dr, dn, bq, br, bn)
+        build = qf_filter.build_fn(mcfg.dst)
+        state = build(dst_core, allq, allr, dn + bn)
+        state = state._replace(
+            overflow=state.overflow | ms.dst.overflow | ms.buf.overflow
+        )
+    return mcfg.dst, state
+
+
+# -- registry bindings (non-public: constructed by begin(), not by name) ----
+
+
+def _make(**spec):
+    """Open a migration directly from a flat-QF spec (conformance shim);
+    real callers go through :func:`begin` via ``filters.auto_scale``."""
+    new_q = spec.pop("new_q", None)
+    chunk = spec.pop("chunk", 1024)
+    buf_q = spec.pop("buf_q", None)
+    cfg, state = qf_filter.make(**spec)
+    return begin(cfg, state, new_q=new_q, chunk=chunk, buf_q=buf_q)
+
+
+def _grow(mcfg: MigratingQFConfig, ms: MigrationState):
+    """Settle, then take the flat QF's canonical doubling step."""
+    cfg, state = finish(mcfg, ms)
+    return qf_filter.grow(cfg, state)
+
+
+def _resize(mcfg: MigratingQFConfig, ms: MigrationState, new_q: int):
+    cfg, state = finish(mcfg, ms)
+    return qf_filter.resize(cfg, state, new_q)
+
+
+def stats(mcfg: MigratingQFConfig, ms: MigrationState):
+    return {
+        "n": (ms.src_n - ms.cursor) + ms.dst.n + ms.buf.n,
+        "migrating": jnp.ones((), jnp.bool_),
+        "cursor": ms.cursor,
+        "pending": ms.src_n - ms.cursor,
+        "buffered": ms.buf.n,
+        "load": (ms.dst.n + ms.buf.n + (ms.src_n - ms.cursor)).astype(jnp.float32)
+        / mcfg.dst.core.m,
+        "overflow": ms.dst.overflow | ms.buf.overflow,
+        "size_bytes": mcfg.src.core.size_bytes
+        + mcfg.dst.core.size_bytes
+        + mcfg.buf.core.size_bytes,
+        **ms.io._asdict(),
+    }
+
+
+IMPL = register(
+    FilterImpl(
+        name="migrating_qf",
+        paper_section="§3 resizing, amortized (this repo's incremental variant)",
+        cfg_cls=MigratingQFConfig,
+        make=_make,
+        insert=insert,
+        contains=contains,
+        stats=stats,
+        needs_resize=needs_settle,
+        grow=_grow,
+        resize=_resize,
+    ),
+    public=False,
+)

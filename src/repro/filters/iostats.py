@@ -25,8 +25,10 @@ class IOCounters(NamedTuple):
     """Pytree of device scalars mirroring the fields of ``IOLog``.
 
     ``resizes`` (structural grow/resize passes; their streaming traffic
-    is charged into the seq byte counters) has no ``IOLog`` counterpart
-    and is reported only through ``stats``.
+    is charged into the seq byte counters) and ``migrate_chunks``
+    (bounded incremental-resize chunk moves, each charging its own
+    chunk-sized seq read/write) have no ``IOLog`` counterpart and are
+    reported only through ``stats``.
     """
 
     rand_page_reads: jnp.ndarray  # int32
@@ -36,6 +38,7 @@ class IOCounters(NamedTuple):
     flushes: jnp.ndarray  # int32
     merges: jnp.ndarray  # int32
     resizes: jnp.ndarray  # int32
+    migrate_chunks: jnp.ndarray  # int32
 
 
 def zeros() -> IOCounters:
@@ -48,6 +51,7 @@ def zeros() -> IOCounters:
         flushes=jnp.zeros((), jnp.int32),
         merges=jnp.zeros((), jnp.int32),
         resizes=jnp.zeros((), jnp.int32),
+        migrate_chunks=jnp.zeros((), jnp.int32),
     )
 
 

@@ -32,11 +32,17 @@ class QFilterConfig(NamedTuple):
     max_load: float = 0.75
     backend: str = "reference"
     window: int = 256  # reference lookup window (see qf.lookup)
+    # low watermark: shrink only once the count fits the HALVED table at
+    # this fraction of its design capacity (hysteresis vs needs_resize)
+    shrink_load: float = 0.4
 
     @property
     def core(self) -> qf.QFConfig:
         return qf.QFConfig(
-            q=self.q, r=self.r, slack=self.slack, seed=self.seed,
+            q=self.q,
+            r=self.r,
+            slack=self.slack,
+            seed=self.seed,
             max_load=self.max_load,
         )
 
@@ -175,6 +181,31 @@ def grow(cfg: QFilterConfig, state):
     return resize(cfg, state, cfg.q + 1)
 
 
+def _can_halve(cfg: QFilterConfig) -> bool:
+    # shrinking re-merges a remainder bit: r widens by one, which must
+    # stay inside the uint32 remainder plane (31 bits under pallas)
+    max_r = 31 if cfg.backend == "pallas" else 32
+    return cfg.q > 1 and cfg.r + 1 <= max_r
+
+
+def needs_shrink(cfg: QFilterConfig, state):
+    """Device predicate: the population fits the halved table at the
+    low watermark (``shrink_load`` of its capacity) — the hysteresis
+    band keeping grow/shrink from thrashing."""
+    if not _can_halve(cfg):
+        return jnp.zeros((), jnp.bool_)
+    halved = cfg.core._replace(q=cfg.q - 1, r=cfg.r + 1)
+    return state.n <= jnp.int32(cfg.shrink_load * halved.capacity)
+
+
+def shrink(cfg: QFilterConfig, state):
+    """One halving step: re-merge a quotient bit into the remainder
+    (paper §3 resizing, run downward — the fp rate *improves*)."""
+    if not _can_halve(cfg):
+        raise ValueError(f"cannot shrink q={cfg.q}, r={cfg.r} further")
+    return resize(cfg, state, cfg.q - 1)
+
+
 def stats(cfg: QFilterConfig, state):
     return {
         "n": state.n,
@@ -198,5 +229,7 @@ IMPL = register(
         needs_resize=needs_resize,
         grow=grow,
         resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
     )
 )

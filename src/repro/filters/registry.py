@@ -18,6 +18,8 @@ Protocol (all ops pure; states are pytrees; every op is jittable):
     needs_resize(cfg, state)      -> bool[]         (optional, jittable)
     grow(cfg, state)              -> (cfg, state)   (optional, host-level)
     resize(cfg, state, **kw)      -> (cfg, state)   (optional, host-level)
+    needs_shrink(cfg, state)      -> bool[]         (optional, jittable)
+    shrink(cfg, state)            -> (cfg, state)   (optional, host-level)
 
 ``k`` is an optional valid-prefix count so fixed-shape (padded) batches
 can carry a dynamic number of real keys through ``lax.scan``.
@@ -28,8 +30,17 @@ protocol splits it into a jit-friendly device predicate
 canonical one-step doubling (guaranteed to clear ``needs_resize``
 eventually), ``resize`` takes per-family keyword targets (``new_q`` for
 the QF families, ``levels``/``fanout`` for the cascade, ``factor`` for
-the Bloom family).  The façade's ``auto_grow`` composes them into an
-ingest driver.
+the Bloom family).  ``needs_shrink``/``shrink`` are the mirror image:
+a low-watermark device predicate plus the host-level halving step (qf
+re-merges a fingerprint bit, buffered re-streams the disk QF one bit
+narrower, cascade pops empty levels, sharded redistributes into half
+the shards, bloom folds its cell tiling).  The façade's ``auto_grow``
+and ``auto_scale`` drivers compose them into ingest loops.
+
+Implementations registered with ``public=False`` dispatch through the
+façade by config type but do not appear in ``names()`` — used for
+transient wrapper structures (e.g. the in-flight incremental-resize
+migration) that callers never construct by name.
 """
 
 from __future__ import annotations
@@ -51,6 +62,8 @@ class FilterImpl(NamedTuple):
     needs_resize: Optional[Callable] = None  # (cfg, state) -> bool[] (device)
     grow: Optional[Callable] = None  # (cfg, state) -> (cfg, state)
     resize: Optional[Callable] = None  # (cfg, state, **kw) -> (cfg, state)
+    needs_shrink: Optional[Callable] = None  # (cfg, state) -> bool[] (device)
+    shrink: Optional[Callable] = None  # (cfg, state) -> (cfg, state)
     # config-dependent capability (e.g. bloom deletes only when counting);
     # None means "delete works for every cfg of this type"
     can_delete: Optional[Callable] = None  # (cfg) -> bool
@@ -69,18 +82,21 @@ class FilterImpl(NamedTuple):
 
 _BY_NAME: dict[str, FilterImpl] = {}
 _BY_CFG: dict[type, FilterImpl] = {}
+_INTERNAL: set[str] = set()
 
 
-def register(impl: FilterImpl) -> FilterImpl:
+def register(impl: FilterImpl, public: bool = True) -> FilterImpl:
     if impl.name in _BY_NAME:
         raise ValueError(f"filter {impl.name!r} already registered")
     _BY_NAME[impl.name] = impl
     _BY_CFG[impl.cfg_cls] = impl
+    if not public:
+        _INTERNAL.add(impl.name)
     return impl
 
 
 def names() -> tuple[str, ...]:
-    return tuple(sorted(_BY_NAME))
+    return tuple(sorted(set(_BY_NAME) - _INTERNAL))
 
 
 def by_name(name: str) -> FilterImpl:

@@ -34,12 +34,17 @@ class ShardedQFilterConfig(NamedTuple):
     axis: str = "data"
     seed: int = 0
     capacity_factor: float = 2.0
+    shrink_load: float = 0.4  # low watermark for shard consolidation
 
     @property
     def core(self) -> sf.ShardedQFConfig:
         return sf.ShardedQFConfig(
-            q=self.q, r=self.r, n_shards=self.n_shards, axis=self.axis,
-            seed=self.seed, capacity_factor=self.capacity_factor,
+            q=self.q,
+            r=self.r,
+            n_shards=self.n_shards,
+            axis=self.axis,
+            seed=self.seed,
+            capacity_factor=self.capacity_factor,
         )
 
 
@@ -145,13 +150,101 @@ def grow(cfg: ShardedQFilterConfig, state):
 
 
 def resize(cfg: ShardedQFilterConfig, state, new_q: int):
-    """Grow to ``new_q`` global quotient bits (shrinking a sharded QF
-    would need cross-shard redistribution — not supported)."""
+    """Grow to ``new_q`` global quotient bits (shrinking the *table*
+    would need per-slot re-merging across every shard; capacity comes
+    back down by consolidating shards instead — see :func:`shrink`)."""
     if new_q < cfg.q:
-        raise NotImplementedError("sharded_qf only grows (new_q >= q)")
+        raise NotImplementedError(
+            "sharded_qf tables only grow (new_q >= q); use shrink() to "
+            "consolidate shards when load is low"
+        )
     while cfg.q < new_q:
         cfg, state = grow(cfg, state)
     return cfg, state
+
+
+def _can_halve(cfg: ShardedQFilterConfig) -> bool:
+    # halving merges shard pairs AND re-merges one quotient bit into the
+    # remainder (the inverse of grow): it needs an even pair count, a
+    # surviving local table, and remainder headroom for the returned bit
+    return (
+        cfg.n_shards >= 2
+        and cfg.n_shards % 2 == 0
+        and cfg.q - cfg.core.shard_bits >= 2
+        and cfg.r + cfg.core.shard_bits <= 32  # declared local width holds
+    )
+
+
+def needs_shrink(cfg: ShardedQFilterConfig, state):
+    """Device predicate: the population fits the halved filter (half
+    the shards AND half the global buckets) at the low watermark.
+
+    Each shrink halves global capacity, so the threshold halves with
+    it — real hysteresis: one quiet period consolidates one step, not
+    the whole fleet, and the count must double again before the high
+    watermark can trip."""
+    if not _can_halve(cfg):
+        return jnp.zeros((), jnp.bool_)
+    halved = cfg._replace(q=cfg.q - 1, r=cfg.r + 1, n_shards=cfg.n_shards // 2)
+    cap = halved.core.local_cfg.capacity * halved.n_shards
+    return jnp.sum(state.n) <= jnp.int32(cfg.shrink_load * cap)
+
+
+def shrink(cfg: ShardedQFilterConfig, state):
+    """Halve the filter: shard pairs redistribute and a quotient bit
+    re-merges into the remainder — the exact inverse of ``grow``.
+
+    Dropping the global quotient's low bit sends it to the remainder
+    top (paper §3 resizing, run downward), and dropping one owner bit
+    hands shards ``2s`` and ``2s + 1`` to the new shard ``s``: after a
+    per-shard width-true requotient the owner parity becomes the local
+    top bit, so every entry of shard ``2s + 1`` lands exactly one
+    half-table above shard ``2s``'s entries.  Both inputs are sorted
+    streams with all of ``2s``'s quotients preceding ``2s + 1``'s
+    offset quotients, so the redistribution is one sort-free two-stream
+    merge + rebuild per pair — the same streaming pass schedule as
+    every other structural op in this repo.  The local table geometry
+    is unchanged; only the stacked leading dim halves.
+    """
+    if not _can_halve(cfg):
+        raise ValueError(
+            f"cannot halve q={cfg.q}, r={cfg.r}, n_shards={cfg.n_shards}"
+        )
+    new_cfg = cfg._replace(q=cfg.q - 1, r=cfg.r + 1, n_shards=cfg.n_shards // 2)
+    lold, lnew = cfg.core.local_cfg, new_cfg.core.local_cfg
+    # same local geometry before and after: one quotient bit moves from
+    # the local table to the remainder while one owner bit moves back in
+    assert (lnew.q, lnew.r) == (lold.q, lold.r)
+    # width-true split: stored remainders carry the global r bits only
+    win = lold._replace(r=cfg.r)
+    wout = win._replace(q=lold.q - 1, r=cfg.r + 1)
+    half = 1 << wout.q  # odd shards' entries take the upper half
+
+    def one(pair):
+        even = jax.tree.map(lambda x: x[0], pair)
+        odd = jax.tree.map(lambda x: x[1], pair)
+        qe, re_, ne = qf.extract(lold, even)
+        qo, ro, no = qf.extract(lold, odd)
+        qe, re_ = qf._requotient(qe, re_, win, wout)
+        qo, ro = qf._requotient(qo, ro, win, wout)
+        qo = jnp.where(qo == qf.INT32_MAX, qf.INT32_MAX, qo + half)
+        allq, allr = qf.merge_streams(qe, re_, ne, qo, ro, no)
+        new = qf.build_sorted(lnew, allq, allr, ne + no)
+        return new._replace(overflow=new.overflow | even.overflow | odd.overflow)
+
+    paired = jax.tree.map(
+        lambda x: x.reshape(new_cfg.n_shards, 2, *x.shape[1:]), state
+    )
+    merged = jax.vmap(one)(paired)
+    # the result leaves inherit the old (wider) device placement; commit
+    # them onto the halved mesh so the shard_map'd step functions see a
+    # consistent layout
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharding = NamedSharding(
+        _mesh(new_cfg.n_shards, new_cfg.axis), PartitionSpec(new_cfg.axis)
+    )
+    return new_cfg, jax.tree.map(lambda x: jax.device_put(x, sharding), merged)
 
 
 def stats(cfg: ShardedQFilterConfig, state):
@@ -177,5 +270,7 @@ IMPL = register(
         needs_resize=needs_resize,
         grow=grow,
         resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
     )
 )

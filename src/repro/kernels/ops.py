@@ -19,7 +19,9 @@ from .qf_probe import qf_probe_tiles
 INT32_MAX = jnp.int32(2**31 - 1)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("interpret", "block_s"))
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("interpret", "block_s")
+)
 def build_sorted(
     cfg: qf.QFConfig,
     fq: jnp.ndarray,
@@ -117,3 +119,61 @@ def lookup(
 def contains(cfg: qf.QFConfig, state: qf.QFState, keys: jnp.ndarray, **kw):
     fq, fr = qf.fingerprints(cfg, keys)
     return lookup(cfg, state, fq, fr, **kw)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def build_chunk(
+    cfg: qf.QFConfig,
+    state: qf.QFState,
+    fq: jnp.ndarray,
+    fr: jnp.ndarray,
+    k,
+    last_pos,
+    last_fq,
+):
+    """Chunked build-plane entry: append one bounded sorted chunk to a
+    partially built QF (the incremental-resize migration step).
+
+    ``state`` must hold exactly the entries appended so far, built in
+    sorted fingerprint order; ``(last_pos, last_fq)`` carry the probe
+    scan across chunk boundaries (both -1 before the first chunk).  The
+    first ``k`` rows of ``(fq, fr)`` are valid and sorted, and every
+    fingerprint sorts at-or-after the carried ``last_fq``.  Appending
+    chunk by chunk reproduces ``build_sorted`` of the full prefix
+    bit-for-bit: the probe recurrence ``pos[i] = max(pos[i-1] + 1,
+    fq[i])`` closed-forms to ``i + max(last_pos + 1, cummax(fq - i))``,
+    so positions strictly increase and chunks never overwrite.
+
+    O(chunk) work: unlike the full builds this is a handful of
+    scattered single-slot writes, not a tiled streaming pass, so there
+    is no Pallas variant — the bandwidth-bound full rebuilds around a
+    migration (begin/finish) route through ``build_sorted`` above.
+
+    Returns ``(state, last_pos, last_fq)`` with the carries advanced.
+    """
+    t = cfg.total_slots
+    kk = jnp.asarray(k, jnp.int32)
+    idx = jnp.arange(fq.shape[0], dtype=jnp.int32)
+    valid = idx < kk
+
+    d = jnp.where(valid, fq - idx, -INT32_MAX)
+    pos = idx + jnp.maximum(last_pos + 1, jax.lax.cummax(d))
+    overflow = state.overflow | jnp.any(valid & (pos >= t))
+    spos = jnp.where(valid, pos, INT32_MAX)
+
+    prev_fq = jnp.roll(fq, 1).at[0].set(last_fq)
+    con_bits = valid & (fq == prev_fq)
+    shf_bits = valid & (pos != fq)
+
+    new = qf.QFState(
+        rem=state.rem.at[spos].set(fr, mode="drop"),
+        occ=state.occ.at[jnp.where(valid, fq, INT32_MAX)].set(True, mode="drop"),
+        shf=state.shf.at[spos].set(shf_bits, mode="drop"),
+        con=state.con.at[spos].set(con_bits, mode="drop"),
+        n=state.n + kk,
+        overflow=overflow,
+    )
+    last = jnp.clip(kk - 1, 0, fq.shape[0] - 1)
+    new_last_pos = jnp.where(kk > 0, pos[last], last_pos)
+    new_last_fq = jnp.where(kk > 0, fq[last], last_fq)
+    return new, new_last_pos, new_last_fq

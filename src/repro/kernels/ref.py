@@ -25,7 +25,10 @@ def build_ref(total_slots: int, pos, fq, fr, con_bits, shf_bits):
     meta = (
         jnp.zeros((t,), jnp.int32)
         .at[pos]
-        .set(con_bits.astype(jnp.int32) | (shf_bits.astype(jnp.int32) << 1), mode="drop")
+        .set(
+            con_bits.astype(jnp.int32) | (shf_bits.astype(jnp.int32) << 1),
+            mode="drop",
+        )
     )
     occ = jnp.zeros((t,), jnp.int32).at[fq].max(1, mode="drop")
     return rem, meta, occ

@@ -217,7 +217,9 @@ def main(argv=None):
             tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
             path = os.path.join(args.out, tag + ".json")
             try:
-                res = lower_cell(arch, shape, multi_pod=mp, microbatches=args.microbatches)
+                res = lower_cell(
+                    arch, shape, multi_pod=mp, microbatches=args.microbatches
+                )
             except Exception as e:  # noqa: BLE001
                 traceback.print_exc()
                 res = {

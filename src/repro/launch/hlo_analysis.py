@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from functools import lru_cache
 
 _DTYPE_BYTES = {
     "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
@@ -103,7 +102,11 @@ class HloModule:
         for raw in text.splitlines():
             line = raw.rstrip()
             mc = _COMP_RE.match(line.strip())
-            if mc and (line.startswith("ENTRY") or line.startswith("%") or raw.startswith("ENTRY")):
+            if mc and (
+                line.startswith("ENTRY")
+                or line.startswith("%")
+                or raw.startswith("ENTRY")
+            ):
                 cur = Computation(mc.group("name"))
                 self.computations[cur.name] = cur
                 if line.strip().startswith("ENTRY") or raw.startswith("ENTRY"):
@@ -220,7 +223,9 @@ class HloModule:
                 total += t * sum(self.bytes_accessed(c) for c in self._called(ins))
             elif ins.op in ("call", "conditional"):
                 total += sum(self.bytes_accessed(c) for c in self._called(ins))
-            elif ins.op in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+            elif ins.op in (
+                "parameter", "constant", "get-tuple-element", "tuple", "bitcast"
+            ):
                 continue
             elif ins.op == "dynamic-update-slice":
                 # in-place update: traffic = 2 x update slice, not the buffer
@@ -238,7 +243,11 @@ class HloModule:
                 if ins.op == "fusion":
                     for c in self._called(ins):
                         callee = self.computations.get(c)
-                        if callee and callee.instrs and callee.instrs[-1].op == "dynamic-update-slice":
+                        if (
+                            callee
+                            and callee.instrs
+                            and callee.instrs[-1].op == "dynamic-update-slice"
+                        ):
                             root = callee.instrs[-1]
                             on = _OPERAND_RE.findall(root.rest.split("(", 1)[1])
                             upd = (

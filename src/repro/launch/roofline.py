@@ -17,7 +17,7 @@ collective-permute (output-shape convention recorded in EXPERIMENTS.md).
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 # TPU v5e per-chip constants (assignment-provided)
 PEAK_FLOPS = 197e12  # bf16

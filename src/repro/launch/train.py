@@ -13,17 +13,14 @@ under the production mesh.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sharding as shd
 from repro.configs import ARCHS, get_config, make_smoke
 from repro.data.pipeline import DedupPipeline, PipelineConfig
-from repro.models import model
 from repro.train import optimizer as optim
 from repro.train import train_step as ts
 from repro.train.checkpoint import CheckpointManager
@@ -83,7 +80,9 @@ def main(argv=None):
             start_step = latest
             print(f"[train] resumed from step {latest}")
 
-    monitor = ClusterMonitor([f"host{i}" for i in range(jax.process_count())], FTConfig())
+    monitor = ClusterMonitor(
+        [f"host{i}" for i in range(jax.process_count())], FTConfig()
+    )
     sup = TrainSupervisor(
         monitor, FTConfig(), hosts_per_replica=1, current_dp=1,
         on_restore=lambda dp: None,
@@ -119,7 +118,8 @@ def main(argv=None):
             )
             print(
                 f"[train] step={step} loss={loss:.4f} "
-                f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                f"lr={float(metrics['lr']):.2e} "
+                f"gnorm={float(metrics['grad_norm']):.2f} "
                 f"tok/s={tput:.0f} dedup_dropped={pipe.state.docs_dropped}",
                 flush=True,
             )

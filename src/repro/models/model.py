@@ -14,8 +14,7 @@ Public API used by the launcher, tests and benchmarks:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +42,13 @@ Param = S.Param
 def _norm_schema(cfg, dim=None):
     d = dim or cfg.d_model
     if cfg.is_encoder_decoder:  # whisper: LayerNorm
-        return {"scale": Param((d,), ("embed",), "ones"), "bias": Param((d,), ("embed",), "zeros")}
-    return {"scale": Param((d,), ("embed",), "ones" if not cfg.embed_scale else "zeros")}
+        return {
+            "scale": Param((d,), ("embed",), "ones"),
+            "bias": Param((d,), ("embed",), "zeros"),
+        }
+    return {
+        "scale": Param((d,), ("embed",), "ones" if not cfg.embed_scale else "zeros")
+    }
 
 
 def _attn_schema(cfg):
@@ -558,7 +562,9 @@ def _fill_unit_cache(cfg, kind, cache_b, col_b, S, positions):
         cr, _ = _ring_gather(k_rope, S, length)
         cache_b[sub]["c_kv"] = ck
         cache_b[sub]["k_rope"] = cr
-        cache_b[sub]["kpos"] = jnp.broadcast_to(idx[None], ck.shape[:2]).astype(jnp.int32)
+        cache_b[sub]["kpos"] = jnp.broadcast_to(idx[None], ck.shape[:2]).astype(
+            jnp.int32
+        )
         return cache_b
     k, v = col_b[key]
     length = cache_b[sub]["k"].shape[-3]
@@ -666,7 +672,9 @@ def decode_step(params, cfg, cache, tokens, *, mrope_positions=None):
     x = embed_tokens(params["tok_embed"], tokens, cfg.embed_scale, cfg.d_model)
     x = x.astype(jnp.dtype(cfg.act_dtype))
     if cfg.rope == "learned":
-        x = x + params["pos_embed"][jnp.minimum(pos, cfg.max_seq - 1)][None, None].astype(x.dtype)
+        x = x + params["pos_embed"][jnp.minimum(pos, cfg.max_seq - 1)][
+            None, None
+        ].astype(x.dtype)
     if cfg.rope == "mrope" and mrope_positions is None:
         mrope_positions = jnp.broadcast_to(positions[None], (3, B, 1))
 

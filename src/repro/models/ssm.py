@@ -38,7 +38,8 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
     CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
     CB = jnp.repeat(CB, hper, axis=2)  # (B,nc,H,Q,Q)
     diff = (
-        cum.transpose(0, 1, 3, 2)[..., :, None] - cum.transpose(0, 1, 3, 2)[..., None, :]
+        cum.transpose(0, 1, 3, 2)[..., :, None]
+        - cum.transpose(0, 1, 3, 2)[..., None, :]
     )  # (B,nc,H,Q,Q); <= 0 on the causal (lower) triangle since cum is
     # non-increasing — clamp so the masked upper triangle cannot
     # overflow exp and poison gradients through the where.
@@ -121,7 +122,12 @@ def ssm_block(p, x, cfg, *, cache=None):
         dt1 = dt[:, 0]  # (B, H)
         dA = jnp.exp(dt1 * A)  # (B, H)
         Bh = jnp.repeat(Bm[:, 0], H // G, axis=1) if G != H else Bm[:, 0]
-        upd = jnp.einsum("bhn,bhp,bh->bhpn", Bh.astype(jnp.float32), xh[:, 0].astype(jnp.float32), dt1)
+        upd = jnp.einsum(
+            "bhn,bhp,bh->bhpn",
+            Bh.astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+            dt1,
+        )
         h1 = h0.astype(jnp.float32) * dA[..., None, None] + upd
         Ch = jnp.repeat(Cm[:, 0], H // G, axis=1) if G != H else Cm[:, 0]
         y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h1)[:, None]

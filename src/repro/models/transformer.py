@@ -11,8 +11,7 @@ first-dense layers apply unscanned.  Sub-block kinds:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +91,10 @@ def apply_subblock(
 
     if kind == "ssm":
         h, c_new, state = ssm_block(
-            p["ssm"], norm(p["norm"], x, cfg), cfg, cache=cache.get("ssm") if cache else None
+            p["ssm"],
+            norm(p["norm"], x, cfg),
+            cfg,
+            cache=cache.get("ssm") if cache else None,
         )
         x = x + h
         if mode == "prefill":
@@ -103,7 +105,10 @@ def apply_subblock(
 
     if kind == "rec":
         h, c_new, state = recurrent_block(
-            p["rec"], norm(p["norm"], x, cfg), cfg, cache=cache.get("rec") if cache else None
+            p["rec"],
+            norm(p["norm"], x, cfg),
+            cfg,
+            cache=cache.get("rec") if cache else None,
         )
         x = x + h
         if mode == "prefill":
@@ -266,7 +271,11 @@ def scan_units(
         )
         return x, (nc, col, aux)
 
-    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    fn = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if remat
+        else body
+    )
     # (measured: unrolling the decode loop is WORSE — every per-layer
     # cache slice stays live at once, +8 GiB on deepseek decode_32k;
     # the rolled loop reuses one slice buffer. Recorded in §Perf It.H.)

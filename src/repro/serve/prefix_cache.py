@@ -20,21 +20,35 @@ from repro.core.fingerprint import fold_bytes
 class PrefixCacheFilter:
     """Host-facing wrapper holding one functional QF ``(cfg, state)``.
 
-    With ``auto_grow=True`` (default) the filter ingests through
-    ``filters.auto_grow``: when the cache population crosses the QF's
-    max-load point, one remainder bit is re-split into the quotient and
-    the table doubles in place — the serving tier never has to size the
-    filter for peak cache population up front.  Each doubling halves
-    the remaining remainder bits, i.e. doubles the FP (wasted remote
-    probe) rate, so provision ``r`` with the headroom you care about.
+    With ``auto_scale=True`` (default) the filter ingests through
+    ``filters.auto_scale``, which keeps a serving tier honest in both
+    directions without ever stalling a request on a full-table pass:
+
+    * growth is **incremental** — when the cache population crosses the
+      QF's max-load point the driver opens an
+      ``filters.incremental_resize`` migration, and each subsequent
+      request batch moves one bounded ``chunk`` of quotient runs into
+      the doubled table (membership stays exact throughout; the p99
+      insert latency during growth is the chunk cost, not the table
+      cost — see ``benchmarks/bench_incremental.py``);
+    * after heavy eviction the low watermark shrinks the table back
+      (each halving *improves* the fp rate by returning a remainder
+      bit), with hysteresis so a cache oscillating around a boundary
+      never thrashes between grow and shrink.
+
+    Each doubling halves the remaining remainder bits, i.e. doubles the
+    FP (wasted remote probe) rate, so provision ``r`` with the headroom
+    you care about.
     """
 
     def __init__(self, q: int = 16, r: int = 14, seed: int = 0,
-                 backend: str = "reference", auto_grow: bool = True):
+                 backend: str = "reference", auto_scale: bool = True,
+                 chunk: int = 2048):
         self.cfg, self.state = filters.make(
             "qf", q=q, r=r, seed=seed, backend=backend
         )
-        self.auto_grow = auto_grow
+        self.auto_scale = auto_scale
+        self.chunk = chunk
 
     @staticmethod
     def _digest(prompts: np.ndarray) -> jnp.ndarray:
@@ -55,9 +69,9 @@ class PrefixCacheFilter:
             seen[int(k)] = i
         misses = keys[jnp.asarray(~hit)]
         if misses.shape[0]:
-            if self.auto_grow:
-                self.cfg, self.state = filters.auto_grow(
-                    self.cfg, self.state, misses
+            if self.auto_scale:
+                self.cfg, self.state = filters.auto_scale(
+                    self.cfg, self.state, misses, chunk=self.chunk
                 )
             else:
                 self.state = filters.insert(self.cfg, self.state, misses)
@@ -65,7 +79,12 @@ class PrefixCacheFilter:
 
     def evict(self, prompts: np.ndarray) -> None:
         keys = self._digest(prompts)
+        # deletes are not defined mid-migration: collapse it first (the
+        # host-level settle; eviction is already off the hot path)
+        self.cfg, self.state = filters.settle(self.cfg, self.state)
         self.state = filters.delete(self.cfg, self.state, keys)
+        if self.auto_scale and bool(filters.needs_shrink(self.cfg, self.state)):
+            self.cfg, self.state = filters.shrink(self.cfg, self.state)
 
     @property
     def load(self) -> float:

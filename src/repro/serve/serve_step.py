@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro import sharding as shd
 from repro.models import model
 
 

@@ -28,7 +28,7 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np
@@ -84,7 +84,11 @@ class CheckpointManager:
                 "treedef": str(treedef),
                 "n_leaves": len(host),
                 "leaves": [
-                    {"shape": list(a.shape), "dtype": str(a.dtype), "digest": _digest(a)}
+                    {
+                        "shape": list(a.shape),
+                        "dtype": str(a.dtype),
+                        "digest": _digest(a),
+                    }
                     for a in host
                 ],
             }
@@ -146,10 +150,14 @@ class CheckpointManager:
                 f"target structure has {len(like_leaves)}"
             )
         shard_leaves = (
-            _flatten(shardings)[0] if shardings is not None else [None] * len(like_leaves)
+            _flatten(shardings)[0]
+            if shardings is not None
+            else [None] * len(like_leaves)
         )
         out = []
-        for i, (meta, tgt, sh) in enumerate(zip(leaves_meta, like_leaves, shard_leaves)):
+        for i, (meta, tgt, sh) in enumerate(
+            zip(leaves_meta, like_leaves, shard_leaves)
+        ):
             arr = data[f"leaf_{i}"]
             if verify and _digest(arr) != meta["digest"]:
                 raise IOError(f"digest mismatch on leaf {i} — corrupt checkpoint")

@@ -20,7 +20,7 @@ training loop are:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import Enum
 from typing import Callable, Optional
 
@@ -50,7 +50,12 @@ class ClusterEvent:
 class ClusterMonitor:
     """Tracks host health from heartbeats + step timing."""
 
-    def __init__(self, hosts: list[str], cfg: FTConfig, clock: Callable[[], float] = time.monotonic):
+    def __init__(
+        self,
+        hosts: list[str],
+        cfg: FTConfig,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.cfg = cfg
         self.clock = clock
         self.state = {h: HostState.HEALTHY for h in hosts}
@@ -83,7 +88,10 @@ class ClusterMonitor:
         now = self.clock()
         died = []
         for h, t in self.last_beat.items():
-            if self.state[h] is not HostState.DEAD and now - t > self.cfg.heartbeat_timeout_s:
+            if (
+                self.state[h] is not HostState.DEAD
+                and now - t > self.cfg.heartbeat_timeout_s
+            ):
                 self.state[h] = HostState.DEAD
                 died.append(h)
                 self._log("host_dead", host=h)

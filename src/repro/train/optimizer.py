@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -88,8 +88,12 @@ def apply(params, grads, opt: OptState, ocfg: OptConfig):
     new_ef = opt.ef_error
     if ocfg.compress_grads:
         pairs = jax.tree.map(compress_int8, grads, opt.ef_error)
-        grads = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-        new_ef = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        grads = jax.tree.map(
+            lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_ef = jax.tree.map(
+            lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
 
     gnorm = _global_norm(grads)
     clip = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))

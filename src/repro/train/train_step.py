@@ -9,8 +9,7 @@ backward pass emit reduce-scatters instead of all-reduces.
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +111,10 @@ def jit_train_step(cfg, ocfg, mesh, *, microbatches=1, remat=True, seq_shard=Tru
         with shd.use_rules(rules):
             return step(state, batch)
 
-    batch_spec = {"tokens": rules.spec(("batch", None)), "targets": rules.spec(("batch", None))}
+    batch_spec = {
+        "tokens": rules.spec(("batch", None)),
+        "targets": rules.spec(("batch", None)),
+    }
     if cfg.is_encoder_decoder:
         batch_spec["frames"] = rules.spec(("batch", None, None))
     batch_sh = jax.tree.map(

@@ -110,7 +110,6 @@ class TestRoofline:
 
 class TestShardingRules:
     def test_divisibility_fallbacks(self):
-        import numpy as np
         from repro import sharding as shd
         from repro.configs import get_config
 

@@ -132,4 +132,6 @@ def test_full_config_headline_params():
             int(np.prod(p.shape))
             for p in jax.tree.leaves(sch, is_leaf=S.is_param)
         )
-        assert lo <= total <= hi, f"{name}: {total/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+        assert lo <= total <= hi, (
+            f"{name}: {total/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+        )

@@ -5,13 +5,10 @@ subprocess with XLA_FLAGS set — keeping the main pytest session at one
 device as required (smoke tests must see 1 device).
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -48,7 +45,9 @@ def test_sharded_filter_insert_lookup():
         state = insert(state, keys)
         hit = lookup(state, keys)
         print("present:", bool(hit.all()))
-        absent = jnp.asarray(rng.integers(0, 2**32, 4096, dtype=np.int64).astype(np.uint32))
+        absent = jnp.asarray(
+            rng.integers(0, 2**32, 4096, dtype=np.int64).astype(np.uint32)
+        )
         fp = float(lookup(state, absent).mean())
         print("fp_ok:", fp < 0.01)
         """
@@ -105,7 +104,9 @@ def test_decode_multidevice_matches_single():
         cfg = make_smoke(get_config("deepseek-7b"))
         rng = np.random.default_rng(1)
         params = model.init(cfg, 0)
-        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)
+        }
         _, cache = model.prefill(params, cfg, batch, remat=False)
         tok = batch["tokens"][:, -1:]
         ref, _ = model.decode_step(params, cfg, cache, tok)
@@ -140,8 +141,12 @@ def test_gradient_compression_collective_shrinks():
         step = jax.jit(ts.make_train_step(cfg, ocfg))
         for i in range(3):
             batch = {
-                "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32),
-                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32
+                ),
+                "targets": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32
+                ),
             }
             state, m = step(state, batch)
             assert np.isfinite(float(m["loss"]))

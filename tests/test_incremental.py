@@ -1,0 +1,404 @@
+"""Incremental (amortized) resize + watermark auto-shrink (PR 4 tentpole).
+
+Pins the three claims that make the paper's "don't thrash" growth story
+real end-to-end:
+
+* **migration-in-flight semantics** — membership over old, fresh, and
+  in-transit keys has no false negatives at *every* cursor position,
+  the chunked left-to-right build reproduces ``build_sorted``
+  bit-for-bit, and a settled migration answers exactly like a filter
+  built statically at the final size;
+* **interruptibility** — a ``data.pipeline`` snapshot taken
+  mid-migration restores into a fresh pipeline and the migration
+  resumes from its cursor (and keeps deduplicating correctly);
+* **auto-shrink** — every family binds the ``needs_shrink``/``shrink``
+  protocol; the low watermark's hysteresis band keeps ``auto_scale``
+  from thrashing between grow and shrink around a boundary.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import filters
+from repro.core import quotient_filter as qf
+from repro.filters import incremental_resize as ir
+from repro.kernels import ops as kops
+
+
+def _keys(seed, n, lo=0, hi=2**31):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+class TestMigrationInFlight:
+    def test_no_false_negatives_at_every_cursor_position(self):
+        """Acceptance: old keys, fresh keys, and the in-transit chunk all
+        answer MAY-CONTAIN at every step of the drain."""
+        cfg, st = filters.make("qf", q=10, r=14)
+        old = _keys(0, cfg.core.capacity)
+        st = filters.insert(cfg, st, old)
+        mcfg, ms = ir.begin(cfg, st, chunk=96)  # prime-ish: cursor hits
+        fresh = []  # every offset against the run structure
+        steps = 0
+        while not bool(ir.migration_done(mcfg, ms)):
+            batch = _keys(1000 + steps, 16, lo=2**31, hi=2**32)
+            fresh.append(batch)
+            ms = filters.insert(mcfg, ms, batch)
+            assert bool(filters.contains(mcfg, ms, old).all()), f"step {steps}"
+            for b in fresh:
+                assert bool(filters.contains(mcfg, ms, b).all()), f"step {steps}"
+            steps += 1
+        assert steps >= 7  # actually amortized, not one big pass
+        fcfg, fst = ir.finish(mcfg, ms)
+        assert fcfg.q == cfg.q + 1
+        assert bool(filters.contains(fcfg, fst, old).all())
+        for b in fresh:
+            assert bool(filters.contains(fcfg, fst, b).all())
+        assert not bool(filters.stats(fcfg, fst)["overflow"])
+
+    def test_settled_migration_matches_static_filter_exactly(self):
+        """QF fingerprints are split-invariant, so the migrated filter
+        must agree with a statically built one on hits AND misses."""
+        cfg, st = filters.make("qf", q=9, r=15)
+        old = _keys(2, cfg.core.capacity)
+        st = filters.insert(cfg, st, old)
+        mcfg, ms = ir.begin(cfg, st, chunk=64)
+        fresh = _keys(3, 256, lo=2**31, hi=2**32)
+        for i in range(0, 256, 32):
+            ms = filters.insert(mcfg, ms, fresh[i : i + 32])
+        fcfg, fst = ir.finish(mcfg, ms)
+        scfg, sst = filters.make("qf", q=fcfg.q, r=fcfg.r)
+        sst = filters.insert(scfg, sst, jnp.concatenate([old, fresh]))
+        probes = jnp.concatenate([old[:512], fresh, _keys(4, 4096)])
+        assert bool(
+            (
+                filters.contains(fcfg, fst, probes)
+                == filters.contains(scfg, sst, probes)
+            ).all()
+        )
+        assert int(filters.stats(fcfg, fst)["n"]) == old.shape[0] + 256
+
+    def test_build_chunk_reproduces_build_sorted_bit_for_bit(self):
+        """The carried-scan chunk append IS build_sorted of the prefix."""
+        cfg = qf.QFConfig(q=8, r=10, slack=128)
+        keys = _keys(5, 150)
+        fq, fr = qf.fingerprints(cfg, keys)
+        fq, fr = qf._pad_sort(fq, fr, jnp.ones((150,), jnp.bool_))
+        want = qf.build_sorted(cfg, fq, fr, 150)
+        state = qf.empty(cfg)
+        last_pos = jnp.full((), -1, jnp.int32)
+        last_fq = jnp.full((), -1, jnp.int32)
+        cursor = 0
+        for size in (1, 37, 2, 64, 46):  # ragged chunk boundaries
+            chunk_q = fq[cursor : cursor + size]
+            chunk_r = fr[cursor : cursor + size]
+            state, last_pos, last_fq = kops.build_chunk(
+                cfg, state, chunk_q, chunk_r, size, last_pos, last_fq
+            )
+            cursor += size
+        for a, b in zip(want, state):
+            assert bool(jnp.array_equal(a, b))
+
+    def test_io_charged_per_chunk(self):
+        cfg, st = filters.make("qf", q=9, r=15)
+        st = filters.insert(cfg, st, _keys(6, cfg.core.capacity))
+        mcfg, ms = ir.begin(cfg, st, chunk=128)
+        for i in range(3):
+            ms = filters.insert(mcfg, ms, _keys(7 + i, 16, lo=2**31, hi=2**32))
+        s = filters.stats(mcfg, ms)
+        assert int(s["migrate_chunks"]) == 3
+        assert int(s["resizes"]) == 1
+        # 3 chunks of 128 entries, charged at the old/new slot widths
+        assert float(s["seq_read_bytes"]) == pytest.approx(
+            3 * 128 * mcfg.src.core.bits_per_slot / 8
+        )
+        assert float(s["seq_write_bytes"]) == pytest.approx(
+            3 * 128 * mcfg.dst.core.bits_per_slot / 8
+        )
+
+    def test_buffer_full_trips_settle_predicate(self):
+        """Fresh inserts outrunning the drain must flag needs_settle
+        before the side buffer overflows (auto_scale finishes early)."""
+        cfg, st = filters.make("qf", q=12, r=12)
+        st = filters.insert(cfg, st, _keys(9, cfg.core.capacity))
+        mcfg, ms = ir.begin(cfg, st, chunk=64, buf_q=8)
+        assert not bool(ir.needs_settle(mcfg, ms))
+        big = _keys(10, mcfg.buf.core.capacity + 64, lo=2**31, hi=2**32)
+        ms = filters.insert(mcfg, ms, big)
+        assert bool(ir.needs_settle(mcfg, ms))
+        assert not bool(ir.migration_done(mcfg, ms))
+        fcfg, fst = ir.finish(mcfg, ms)  # early settle drains + folds
+        assert bool(filters.contains(fcfg, fst, big).all())
+        assert not bool(filters.stats(fcfg, fst)["overflow"])
+
+    def test_auto_scale_drives_migration_end_to_end(self):
+        cfg, st = filters.make("qf", q=8, r=16)
+        seen = []
+        for i in range(40):
+            b = _keys(20 + i, 64)
+            seen.append(b)
+            cfg, st = filters.auto_scale(cfg, st, b, chunk=256)
+        migrated = ir.is_migrating(cfg)
+        cfg, st = filters.settle(cfg, st)
+        assert cfg.q > 8  # grew at least once on the way
+        for b in seen:
+            assert bool(filters.contains(cfg, st, b).all())
+        assert not bool(filters.stats(cfg, st)["overflow"])
+        assert isinstance(migrated, bool)
+
+    def test_merge_streams_matches_sort(self):
+        rng = np.random.default_rng(11)
+        for na, nb in ((0, 5), (7, 0), (33, 17), (64, 64)):
+            la, lb = na + 9, nb + 4
+            aq = np.sort(rng.integers(0, 200, na)).astype(np.int32)
+            bq = np.sort(rng.integers(0, 200, nb)).astype(np.int32)
+            ar = rng.integers(0, 2**16, na).astype(np.uint32)
+            br = rng.integers(0, 2**16, nb).astype(np.uint32)
+            # remainders must be sorted within equal quotients
+            aq_j = jnp.concatenate(
+                [jnp.asarray(aq), jnp.full((la - na,), qf.INT32_MAX, jnp.int32)]
+            )
+            bq_j = jnp.concatenate(
+                [jnp.asarray(bq), jnp.full((lb - nb,), qf.INT32_MAX, jnp.int32)]
+            )
+            ar_j = jnp.concatenate(
+                [jnp.asarray(ar), jnp.full((la - na,), qf.UINT32_MAX, jnp.uint32)]
+            )
+            br_j = jnp.concatenate(
+                [jnp.asarray(br), jnp.full((lb - nb,), qf.UINT32_MAX, jnp.uint32)]
+            )
+            aq_j, ar_j = qf._pad_sort(aq_j, ar_j, jnp.arange(la) < na)
+            bq_j, br_j = qf._pad_sort(bq_j, br_j, jnp.arange(lb) < nb)
+            mq, mr = qf.merge_streams(aq_j, ar_j, na, bq_j, br_j, nb)
+            wq, wr = qf._pad_sort(
+                jnp.concatenate([aq_j, bq_j]),
+                jnp.concatenate([ar_j, br_j]),
+                jnp.concatenate([jnp.arange(la) < na, jnp.arange(lb) < nb]),
+            )
+            assert bool(jnp.array_equal(mq, wq)) and bool(jnp.array_equal(mr, wr))
+
+    def test_facade_rejects_delete_mid_migration(self):
+        cfg, st = filters.make("qf", q=8, r=16)
+        st = filters.insert(cfg, st, _keys(12, cfg.core.capacity))
+        mcfg, ms = ir.begin(cfg, st)
+        assert not filters.supports(mcfg, "delete")
+        with pytest.raises(NotImplementedError):
+            filters.delete(mcfg, ms, _keys(13, 8))
+
+
+class TestPipelineMigrationSnapshot:
+    def test_snapshot_restore_mid_migration_resumes(self):
+        """Acceptance: interrupting a migration (snapshot/restore in
+        data/pipeline.py) resumes correctly."""
+        from repro.data.pipeline import DedupPipeline, PipelineConfig
+
+        cfgp = PipelineConfig(
+            seq_len=64,
+            batch_size=2,
+            duplicate_fraction=0.0,
+            seed=21,
+            dedup_family="qf",
+            dedup_ram_q=8,
+            dedup_p=28,
+            dedup_chunk=64,
+        )
+        pipe = DedupPipeline(cfgp)
+        rng = np.random.default_rng(5)
+        ingested = []
+        # ingest until a migration is actually in flight
+        for _ in range(64):
+            ids = rng.integers(0, 2**32, 48, dtype=np.uint64).astype(np.uint32)
+            ingested.append(ids)
+            pipe._dedup(ids)
+            if ir.is_migrating(pipe.filter_cfg):
+                break
+        assert ir.is_migrating(pipe.filter_cfg), "never entered migration"
+        cursor_at_snap = int(pipe.filter_state.cursor)
+        snap = pipe.snapshot()
+
+        pipe2 = DedupPipeline(cfgp)
+        pipe2.restore(snap)
+        assert ir.is_migrating(pipe2.filter_cfg)
+        assert int(pipe2.filter_state.cursor) == cursor_at_snap
+        # everything ingested before the snapshot is recognized as dup
+        for ids in ingested:
+            assert not pipe2._dedup(ids).any()
+        # and the restored pipeline can finish the migration and go on
+        for i in range(64):
+            ids = rng.integers(0, 2**32, 48, dtype=np.uint64).astype(np.uint32)
+            pipe2._dedup(ids)
+            if not ir.is_migrating(pipe2.filter_cfg):
+                break
+        assert not ir.is_migrating(pipe2.filter_cfg)
+        assert not bool(
+            filters.stats(pipe2.filter_cfg, pipe2.filter_state)["overflow"]
+        )
+
+    def test_mismatched_snapshot_still_refused(self):
+        from repro.data.pipeline import DedupPipeline, PipelineConfig
+
+        a = PipelineConfig(dedup_family="qf", dedup_ram_q=8, dedup_p=28)
+        b = PipelineConfig(dedup_family="qf", dedup_ram_q=9, dedup_p=28)
+        pa, pb = DedupPipeline(a), DedupPipeline(b)
+        snap = pa.snapshot()
+        snap["filter_leaves"] = snap["filter_leaves"][:-1]  # corrupt
+        with pytest.raises(ValueError):
+            pb.restore(snap)
+
+
+class TestAutoShrink:
+    def test_every_family_answers_shrink_through_facade(self):
+        for name in filters.names():
+            assert filters.supports(name, "needs_shrink"), name
+            assert filters.supports(name, "shrink"), name
+
+    def test_qf_shrink_roundtrip_improves_fp_budget(self):
+        cfg, st = filters.make("qf", q=10, r=14)
+        keys = _keys(30, 120)
+        st = filters.insert(cfg, st, keys)
+        assert bool(filters.needs_shrink(cfg, st))  # 120 < 0.4 * cap(q=9)
+        new_cfg, new_st = filters.shrink(cfg, st)
+        assert (new_cfg.q, new_cfg.r) == (9, 15)  # remainder bit comes back
+        assert bool(filters.contains(new_cfg, new_st, keys).all())
+        assert int(filters.stats(new_cfg, new_st)["n"]) == 120
+        assert not bool(filters.needs_resize(new_cfg, new_st))
+
+    def test_bloom_fold_preserves_membership_and_deletes(self):
+        cfg, st = filters.make("bloom", m_bits=1 << 12, k=4, counting=True)
+        keys = _keys(31, 200)
+        st = filters.insert(cfg, st, keys)
+        cfg2, st2 = filters.grow(cfg, st)
+        assert bool(filters.needs_shrink(cfg2, st2))
+        cfg3, st3 = filters.shrink(cfg2, st2)
+        assert cfg3.m_bits == cfg.m_bits
+        assert bool(filters.contains(cfg3, st3, keys).all())
+        st3 = filters.delete(cfg3, st3, keys[:50])
+        assert int(filters.stats(cfg3, st3)["n"]) == 150
+
+    def test_blocked_bloom_fold(self):
+        cfg, st = filters.make(
+            "blocked_bloom", m_bits=1 << 13, k=4, block_bits=1 << 10
+        )
+        keys = _keys(32, 100)
+        st = filters.insert(cfg, st, keys)
+        cfg2, st2 = filters.grow(cfg, st)
+        cfg3, st3 = filters.shrink(cfg2, st2)
+        assert cfg3.n_blocks == cfg.n_blocks
+        assert bool(filters.contains(cfg3, st3, keys).all())
+
+    def test_cascade_pops_empty_levels(self):
+        cfg, st = filters.make("cascade", ram_q=7, p=30, fanout=4, levels=1)
+        keys = _keys(33, 3000)
+        for i in range(0, 3000, 64):
+            cfg, st = filters.auto_scale(cfg, st, keys[i : i + 64])
+        assert cfg.levels > 1
+        st = filters.delete(cfg, st, keys[:2950])
+        popped = 0
+        while bool(filters.needs_shrink(cfg, st)):
+            cfg, st = filters.shrink(cfg, st)
+            popped += 1
+        assert popped >= 1
+        assert bool(filters.contains(cfg, st, keys[2950:]).all())
+        assert not bool(filters.needs_resize(cfg, st))
+
+    def test_buffered_disk_shrink_charges_io(self):
+        cfg, st = filters.make("buffered_qf", ram_q=7, disk_q=12, p=26)
+        keys = _keys(34, 512)  # disk ends well under 0.4 * cap(disk_q=11)
+        for i in range(0, 512, 64):
+            st = filters.insert(cfg, st, keys[i : i + 64])
+        assert bool(filters.needs_shrink(cfg, st))
+        before = filters.stats(cfg, st)
+        cfg2, st2 = filters.shrink(cfg, st)
+        after = filters.stats(cfg2, st2)
+        assert cfg2.disk_q == 11
+        assert bool(filters.contains(cfg2, st2, keys).all())
+        assert int(after["resizes"]) == int(before["resizes"]) + 1
+        assert float(after["seq_read_bytes"]) > float(before["seq_read_bytes"])
+
+    def test_hysteresis_no_thrash_around_boundary(self):
+        """Oscillating around the high watermark must not flip the
+        structure back and forth: after a grow, the shrink watermark
+        sits far below the boundary that triggered it."""
+        cfg, st = filters.make("qf", q=8, r=16)
+        keys = _keys(35, cfg.core.capacity + 32)
+        cfg, st = filters.auto_scale(cfg, st, keys, incremental=False)
+        assert cfg.q == 9  # grew past the boundary
+        transitions = 0
+        last_q = cfg.q
+        for i in range(12):
+            # delete and reinsert a small band around the old boundary
+            st = filters.delete(cfg, st, keys[:16])
+            cfg, st = filters.auto_scale(cfg, st, keys[:16], incremental=False)
+            if cfg.q != last_q:
+                transitions += 1
+                last_q = cfg.q
+        assert transitions == 0  # hysteresis band holds
+
+    def test_sharded_shrink_redistributes_across_devices(self):
+        """Halve a 2-shard filter on 2 fake devices (subprocess, as in
+        test_distributed) and check membership + static equivalence."""
+        from tests.test_distributed import run_with_devices
+
+        out = run_with_devices(
+            """
+            import numpy as np, jax.numpy as jnp
+            from repro import filters
+
+            rng = np.random.default_rng(7)
+            keys = jnp.asarray(
+                rng.integers(0, 2**31, 512, dtype=np.int64).astype(np.uint32)
+            )
+            cfg, st = filters.make("sharded_qf", q=12, r=10, n_shards=2)
+            st = filters.insert(cfg, st, keys)
+            assert bool(filters.needs_shrink(cfg, st))  # 512 < 0.4*cap(q=11)
+            new_cfg, new_st = filters.shrink(cfg, st)
+            # the exact inverse of grow: half the shards, half the buckets,
+            # one remainder bit back
+            assert (new_cfg.q, new_cfg.r, new_cfg.n_shards) == (11, 11, 1)
+            s = filters.stats(new_cfg, new_st)
+            assert int(s["n"]) == 512 and not bool(s["overflow"])
+            assert bool(filters.contains(new_cfg, new_st, keys).all())
+            # one step of hysteresis: the halved threshold must not retrip
+            # (512 > 0.4 * cap(q=10) = 307)
+            assert not bool(filters.needs_shrink(new_cfg, new_st))
+            scfg, sst = filters.make("sharded_qf", q=11, r=11, n_shards=1)
+            sst = filters.insert(scfg, sst, keys)
+            probes = jnp.asarray(
+                rng.integers(2**31, 2**32, 4096, dtype=np.int64).astype(np.uint32)
+            )
+            assert bool(
+                (
+                    filters.contains(new_cfg, new_st, probes)
+                    == filters.contains(scfg, sst, probes)
+                ).all()
+            )
+            print("OK")
+            """,
+            n_devices=2,
+        )
+        assert "OK" in out
+
+
+class TestServingCache:
+    def test_prefix_cache_grows_incrementally_and_shrinks_after_eviction(self):
+        from repro.serve.prefix_cache import PrefixCacheFilter
+
+        pc = PrefixCacheFilter(q=8, r=18, chunk=128)
+        rng = np.random.default_rng(40)
+        prompts = [rng.integers(0, 1000, 24, dtype=np.int64) for _ in range(700)]
+        for i in range(0, 700, 50):
+            hits = pc.check_and_insert(np.asarray(prompts[i : i + 50]))
+            assert hits.shape == (50,)
+        # everything previously inserted must hit (settle may be pending)
+        for i in range(0, 700, 100):
+            assert pc.check_and_insert(np.asarray(prompts[i : i + 50])).all()
+        grown_q = (
+            pc.cfg.dst.q if ir.is_migrating(pc.cfg) else pc.cfg.q
+        )
+        assert grown_q > 8
+        # evicting most of the cache lets the low watermark shrink it
+        for i in range(0, 650, 50):
+            pc.evict(np.asarray(prompts[i : i + 50]))
+        assert not ir.is_migrating(pc.cfg)  # evict settles first
+        assert pc.cfg.q <= grown_q

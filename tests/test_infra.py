@@ -1,7 +1,6 @@
 """Data pipeline, checkpointing, fault-tolerance, optimizer tests."""
 
 import os
-import pickle
 
 import numpy as np
 import jax
@@ -69,7 +68,9 @@ class TestCheckpoint:
         mgr.save(5, state)
         assert mgr.latest_step() == 5
         got = mgr.restore(5, jax.eval_shape(lambda: state))
-        np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(10, dtype=np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(got["a"]), np.arange(10, dtype=np.float32)
+        )
 
     def test_gc_keeps_last_k(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path), keep_last_k=2)
@@ -104,7 +105,9 @@ class TestCheckpoint:
         mgr = CheckpointManager(str(tmp_path))
         mgr.save(1, {"x": jnp.zeros(4)})
         with pytest.raises(ValueError):
-            mgr.restore(1, jax.eval_shape(lambda: {"x": jnp.zeros(4), "y": jnp.zeros(2)}))
+            mgr.restore(
+                1, jax.eval_shape(lambda: {"x": jnp.zeros(4), "y": jnp.zeros(2)})
+            )
 
 
 class TestFaultTolerance:
@@ -169,7 +172,9 @@ class TestFaultTolerance:
 
 class TestOptimizer:
     def test_adamw_reduces_loss(self):
-        ocfg = optim.OptConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0)
+        ocfg = optim.OptConfig(
+            lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0
+        )
         params = {"w": jnp.asarray([3.0, -2.0])}
         opt = optim.init(params, ocfg)
         loss = lambda p: jnp.sum(p["w"] ** 2)
@@ -198,7 +203,9 @@ class TestOptimizer:
         for _ in range(64):
             deq, err = optim.compress_int8(g, err)
             total = total + deq
-        np.testing.assert_allclose(np.asarray(total / 64), np.asarray(g), rtol=0.05, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(total / 64), np.asarray(g), rtol=0.05, atol=1e-4
+        )
 
     def test_schedule_warmup_and_decay(self):
         ocfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)

@@ -23,7 +23,9 @@ def _mkfilter(q, r, n, seed=0, max_load=1.0, slack=1024):
     return cfg, st, keys, rng
 
 
-@pytest.mark.parametrize("q,r,n", [(8, 8, 100), (10, 12, 700), (12, 6, 3000), (14, 16, 12000)])
+@pytest.mark.parametrize(
+    "q,r,n", [(8, 8, 100), (10, 12, 700), (12, 6, 3000), (14, 16, 12000)]
+)
 @pytest.mark.parametrize("block_s", [128, 256])
 def test_build_kernel_matches_core(q, r, n, block_s):
     cfg, st_ref, keys, _ = _mkfilter(q, r, n)
@@ -53,12 +55,19 @@ def test_build_kernel_matches_ref_oracle():
     np.testing.assert_array_equal(np.asarray(meta_ref), np.asarray(meta_ker))
 
 
-@pytest.mark.parametrize("q,r,n,load", [(8, 8, 180, 0.7), (10, 10, 900, 0.9), (12, 12, 2000, 0.5)])
+@pytest.mark.parametrize(
+    "q,r,n,load", [(8, 8, 180, 0.7), (10, 10, 900, 0.9), (12, 12, 2000, 0.5)]
+)
 @pytest.mark.parametrize("tile_t,wblk", [(128, 1024), (256, 512)])
 def test_probe_kernel_matches_exact(q, r, n, load, tile_t, wblk):
     cfg, st, keys, rng = _mkfilter(q, r, n, max_load=load)
     probes = jnp.concatenate(
-        [keys, jnp.asarray(rng.integers(0, 2**32, size=2 * n, dtype=np.int64).astype(np.uint32))]
+        [
+            keys,
+            jnp.asarray(
+                rng.integers(0, 2**32, size=2 * n, dtype=np.int64).astype(np.uint32)
+            ),
+        ]
     )
     fq, fr = qf.fingerprints(cfg, probes)
     exact = qf.lookup_exact(cfg, st, fq, fr)
@@ -115,7 +124,12 @@ def test_high_load_overflow_fallback():
     inside the kernel wrapper must keep answers correct."""
     cfg, st, keys, rng = _mkfilter(9, 12, 486, max_load=0.95)
     probes = jnp.concatenate(
-        [keys, jnp.asarray(rng.integers(0, 2**32, size=1000, dtype=np.int64).astype(np.uint32))]
+        [
+            keys,
+            jnp.asarray(
+                rng.integers(0, 2**32, size=1000, dtype=np.int64).astype(np.uint32)
+            ),
+        ]
     )
     fq, fr = qf.fingerprints(cfg, probes)
     exact = qf.lookup_exact(cfg, st, fq, fr)

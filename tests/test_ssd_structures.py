@@ -127,7 +127,9 @@ class TestBFVariants:
         assert 100 * 4 <= reads <= 100 * 12
 
     def test_fbf_layers_and_membership(self, rng):
-        fbf = ForestBloomFilter(bits_per_element=12.0, ram_bytes=1024, total_elements=8000)
+        fbf = ForestBloomFilter(
+            bits_per_element=12.0, ram_bytes=1024, total_elements=8000
+        )
         ks = _keys(rng, 4000)
         for i in range(0, 4000, 250):
             fbf.insert(ks[i : i + 250])

@@ -2,8 +2,6 @@
 would run them (dedup pipeline -> train steps -> checkpoint -> resume;
 prefill -> decode with the AMQ prefix-cache front)."""
 
-import numpy as np
-import jax.numpy as jnp
 
 from repro.launch.train import main as train_main
 from repro.launch.serve import main as serve_main
