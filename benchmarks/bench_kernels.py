@@ -10,6 +10,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import fuse_filter as fuse
 from repro.core import quotient_filter as qf
 from repro.kernels import ops
 
@@ -38,11 +39,32 @@ def run() -> list[Row]:
 
     probes = keys_u32(rng, 1 << 14)
     pq, pr = qf.fingerprints(cfg, probes)
-    t_ref = time_fn(lambda: qf.lookup(cfg, st, pq, pr))
-    t_k = time_fn(lambda: ops.lookup(cfg, st, pq, pr))
+    # min-of-7: these feed the gated machine-invariant ratio rows
+    t_ref = time_fn(lambda: qf.lookup(cfg, st, pq, pr), iters=7, agg=np.min)
+    t_k = time_fn(lambda: ops.lookup(cfg, st, pq, pr), iters=7, agg=np.min)
     got = ops.lookup(cfg, st, pq, pr)
     want = qf.lookup_exact(cfg, st, pq, pr)
     assert bool(jnp.all(got == want)), "kernel probe mismatch"
     rows.append(Row("kernel_qf_probe_interp", t_k * 1e6,
                     f"jnp_windowed_us={t_ref*1e6:.0f};queries=16384"))
+    # gated pallas/reference ratio: machine speed cancels in the
+    # quotient, so the perf gate compares it to baseline WITHOUT the
+    # median normalizer (see perf_gate.RATIO_PREFIXES)
+    rows.append(Row("kernelratio_qf_probe", t_k / t_ref,
+                    "pallas_over_ref;queries=16384"))
+
+    # frozen-tier 3-gather probe: Pallas kernel vs the jnp reference
+    fcfg = fuse.make_config(40_000, p=26, seed=3)
+    fst = fuse.freeze_keys(fcfg, keys)
+    fprobe = keys_u32(rng, 1 << 14)
+    t_fref = time_fn(lambda: fuse.contains(fcfg, fst, fprobe), iters=7, agg=np.min)
+    t_fk = time_fn(lambda: ops.fuse_contains(fcfg, fst, fprobe), iters=7, agg=np.min)
+    got = ops.fuse_contains(fcfg, fst, fprobe)
+    want = fuse.contains(fcfg, fst, fprobe)
+    assert bool(jnp.all(got == want)), "fuse kernel probe mismatch"
+    probe_bytes = 3 * 4 * (1 << 14)  # three u32 table reads per query
+    rows.append(Row("kernel_fuse_probe_interp", t_fk * 1e6,
+                    f"jnp_ref_us={t_fref*1e6:.0f};bytes={probe_bytes}"))
+    rows.append(Row("kernelratio_fuse_probe", t_fk / t_fref,
+                    "pallas_over_ref;queries=16384"))
     return rows

@@ -1,0 +1,121 @@
+"""Frozen (binary-fuse) tier: construction cost, probe latency, and the
+space win over QF cold levels at the same fp-rate target.
+
+The paper's cascade keeps every cold level a QF so merges stay
+streaming; the frozen tier trades that mutability for ~20-30% fewer
+bits per key at a fixed 3-read probe.  These rows quantify both sides
+of the trade: ``xf_freeze_*`` is the write-path cost (a full re-peel),
+``xf_probe_*`` the read path vs an equally-loaded QF, and the
+``derived`` column carries the bits/key comparison the cost model
+predicts (validated in ``tests/test_xor_fuse.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import filters
+from repro.core import cost_model
+from repro.core import fuse_filter as fuse
+from repro.core import quotient_filter as qf
+
+from .common import Row, keys_u32, time_fn
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(17)
+
+    # -- construction: host peel + device assignment, us per key --------
+    for n in (10_000, 100_000):
+        keys = keys_u32(rng, n)
+        cfg = fuse.make_config(n, p=26)
+        t = time_fn(lambda: fuse.freeze_keys(cfg, keys), warmup=1, iters=3)
+        rows.append(
+            Row(
+                f"xf_freeze_n{n}",
+                t / n * 1e6,
+                f"us_per_key;slots={cfg.slots};bits_per_key="
+                f"{cost_model.fuse_bits_per_key(n, cfg.fp_bits):.2f}",
+            )
+        )
+
+    # -- probe: frozen 3-gather vs a QF cold level, same key set --------
+    n = 100_000
+    keys = keys_u32(rng, n)
+    probes = keys_u32(rng, 1 << 14)
+    r = 13
+    fcfg = fuse.make_config(n, p=30, fp_bits=cost_model.fuse_fp_bits_for(r))
+    fst = fuse.freeze_keys(fcfg, keys)
+    qcfg = qf.QFConfig(q=17, r=r, slack=4096)
+    fq, fr_ = qf.fingerprints(qcfg, keys)
+    sq, sr = qf._pad_sort(fq, fr_, jnp.ones(fq.shape, bool))
+    qst = qf.build_sorted(qcfg, sq, sr, n)
+    pq, pr = qf.fingerprints(qcfg, probes)
+
+    t_f = time_fn(lambda: fuse.contains(fcfg, fst, probes))
+    t_q = time_fn(lambda: qf.lookup(qcfg, qst, pq, pr))
+    f_bpk = fcfg.slots * fcfg.fp_bits / n
+    q_bpk = cost_model.qf_bits_per_key(qcfg.q, r, qcfg.slack, 0.75)
+    rows.append(
+        Row(
+            "xf_probe_fuse",
+            t_f * 1e6,
+            f"queries=16384;reads_per_q={cost_model.FUSE_PROBE_READS};"
+            f"bits_per_key={f_bpk:.2f}",
+        )
+    )
+    rows.append(
+        Row(
+            "xf_probe_qf_cold",
+            t_q * 1e6,
+            f"queries=16384;reads_per_q={cost_model.QF_PROBE_READS};"
+            f"bits_per_key={q_bpk:.2f}",
+        )
+    )
+    rows.append(
+        Row(
+            "xf_space_saving",
+            (1 - f_bpk / q_bpk) * 100,
+            f"percent;fuse_bpk={f_bpk:.2f};qf_bpk={q_bpk:.2f}",
+        )
+    )
+
+    # -- cascade demotion end-to-end: frozen vs all-QF cold tier --------
+    spec = dict(ram_q=8, p=26, fanout=2, levels=4)
+    ccfg_q, cst_q = filters.make("cascade", **spec)
+    ccfg_f, cst_f = filters.make("cascade", frozen_below=1, **spec)
+    batches = keys_u32(rng, 2048).reshape(16, 128)
+
+    def ingest(cfg, st):
+        for b in batches:
+            st = filters.insert(cfg, st, b)
+        return st
+
+    t_iq = time_fn(lambda: ingest(ccfg_q, cst_q), warmup=1, iters=3)
+    t_if = time_fn(lambda: ingest(ccfg_f, cst_f), warmup=1, iters=3)
+    frozen_bytes = sum(
+        ccfg_f.level_size_bytes(i) for i in range(ccfg_f.levels)
+        if ccfg_f.is_frozen(i)
+    )
+    qf_bytes = sum(
+        ccfg_q.level_cfg(i).size_bytes for i in range(ccfg_q.levels)
+        if ccfg_f.is_frozen(i)
+    )
+    rows.append(
+        Row(
+            "xf_cascade_ingest_qf",
+            t_iq / batches.size * 1e6,
+            "us_per_key;all-QF levels (device lax.switch collapse)",
+        )
+    )
+    rows.append(
+        Row(
+            "xf_cascade_ingest_frozen",
+            t_if / batches.size * 1e6,
+            f"us_per_key;frozen_below=1;cold_saving="
+            f"{(1 - frozen_bytes / qf_bytes) * 100:.1f}%",
+        )
+    )
+    return rows

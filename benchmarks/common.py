@@ -19,8 +19,13 @@ class Row:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
-    """Median wall seconds per call (blocks on jax results)."""
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, agg=np.median, **kw) -> float:
+    """Aggregated wall seconds per call (blocks on jax results).
+
+    ``agg=np.min`` de-noises runs whose value feeds a *gated* row:
+    min-of-N factors out this container's scheduler stalls (cf. the
+    min-of-4 replays in ``bench_incremental``), where a stall landing
+    in the median would shift a ratio by ~1.5x and flake the gate."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
     ts = []
@@ -28,7 +33,7 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(agg(ts))
 
 
 def keys_u32(rng, n, lo=0, hi=2**32):

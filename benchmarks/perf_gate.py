@@ -34,7 +34,12 @@ BASELINE_PATH = os.path.join("experiments", "bench_baseline.json")
 RESULTS_PATH = os.path.join("experiments", "bench_results.csv")
 
 # rows the gate watches; keep in sync with the perf-gate CI job's --only
-GATED_PREFIXES = ("resize_", "incr_")
+GATED_PREFIXES = ("resize_", "incr_", "kernelratio_")
+
+# rows whose value is already a pallas/reference *ratio*: machine speed
+# cancels in the quotient, so these compare to baseline directly —
+# no median normalizer, and they are excluded from computing it
+RATIO_PREFIXES = ("kernelratio_",)
 
 
 def read_results(path: str) -> dict[str, float]:
@@ -75,12 +80,14 @@ def compare(
         print("perf-gate: no shared rows between results and baseline", file=sys.stderr)
         return 1
     ratios = {k: current[k] / baseline[k] for k in shared}
-    machine = statistics.median(ratios.values())
+    timed = [k for k in shared if not k.startswith(RATIO_PREFIXES)]
+    machine = statistics.median(ratios[k] for k in timed) if timed else 1.0
     print(f"machine-speed normalizer (median ratio): {machine:.3f}")
     print(f"{'row':40s} {'base_us':>12s} {'now_us':>12s} {'rel':>8s}")
     failed = []
     for k in shared:
-        rel = ratios[k] / machine
+        # ratio rows are machine-invariant: gate them un-normalized
+        rel = ratios[k] if k.startswith(RATIO_PREFIXES) else ratios[k] / machine
         flag = ""
         if rel > threshold:
             failed.append(k)

@@ -1,0 +1,352 @@
+"""Binary-fuse (3-wise xor) filter core: the frozen cold tier.
+
+Graf & Lemire's xor / binary-fuse filters trade the quotient filter's
+mutability for ~20-30% smaller tables and a probe of exactly three
+independent reads: each key maps to one cell in each of three
+*consecutive* segments, and membership is
+``fp(x) == T[h0] ^ T[h1] ^ T[h2]``.  A cascade level below Q0 is
+write-once between merge-downs — exactly the immutability this layout
+needs — so the cascade's ``frozen_below`` mode (``repro.filters.cascade``)
+demotes merged-down levels into this form.
+
+Construction is peeling-based and split across the hierarchy the way
+the paper splits its own maintenance work:
+
+* **host-side peel ordering** — the 3-uniform hypergraph over the
+  deduplicated fingerprints is peeled in *parallel rounds* (all keys
+  incident to a degree-1 cell per round; O(log n) rounds whp), a
+  data-dependent loop that cannot live under ``jit``;
+* **device-side batched assignment** — each round is then one gather +
+  xor + scatter batch over the table, replayed in reverse round order.
+  Within a round, assigned cells are provably disjoint from the cells
+  any same-round key reads (a degree-1 cell is incident to exactly one
+  alive key), so the batch is exact.
+
+Because an AMQ cannot re-enumerate its members, a frozen level also
+retains its sorted fingerprint *run* (the stream a merge would read) so
+a later merge-down that consumes the level re-expands it exactly — the
+run is sequential-only cold bytes, never touched by probes; the probe
+tier is the fuse table alone.  Geometry (segment sizing, expansion
+factor, fp-bit matching) comes from :mod:`repro.core.cost_model`.
+
+States are pure pytrees; ``lookup_fp`` is jittable (the per-state retry
+seed rides in the state as a device scalar).  Fingerprints are carried
+in the *canonical split* of the p-bit space (``canonical_split``) so
+streams from cascade levels with different (q, r) splits, and standalone
+key sets, all hash identically.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import cost_model
+from .fingerprint import fingerprint, fmix32
+from .quotient_filter import INT32_MAX, UINT32_MAX
+
+_GOLD1 = jnp.uint32(0x9E3779B9)
+_GOLD2 = jnp.uint32(0x85EBCA77)
+_MUL1 = jnp.uint32(0xC2B2AE3D)
+_MUL2 = jnp.uint32(0x27D4EB2F)
+
+#: host-level construction retries (fresh hash seed each) before giving up
+MAX_PEEL_ATTEMPTS = 32
+
+
+def canonical_split(p: int) -> tuple[int, int]:
+    """The (q, r) split every fuse-filter stream is carried in.
+
+    Any level's (q, r) split of the same p re-quotients to this one
+    losslessly (``quotient_filter._requotient``), so runs from different
+    cascade depths concatenate and hash consistently.
+    """
+    if not (2 <= p <= 62):
+        raise ValueError(f"fingerprint bits p must be in [2, 62], got {p}")
+    r = min(32, p - 1)
+    return p - r, r
+
+
+class FuseConfig(NamedTuple):
+    """Static binary-fuse geometry (hashable; jit-static)."""
+
+    p: int  # input fingerprint bits (shared with the QF families)
+    fp_bits: int  # stored cell width f: fp rate ~= 2**-f
+    segment_length: int  # power of two
+    segment_count: int  # >= 1 (arbitrary; start picked by mulhi)
+    capacity: int  # max multiset size (run storage length)
+    seed: int = 0  # key->fingerprint seed (matches the QF families)
+
+    @property
+    def slots(self) -> int:
+        return (self.segment_count + 2) * self.segment_length
+
+    @property
+    def size_bytes(self) -> int:
+        """Modeled probe-structure size: fp_bits per cell."""
+        return (self.slots * self.fp_bits + 7) // 8
+
+    @property
+    def run_bytes(self) -> int:
+        """Modeled retained-run size: p bits per stored fingerprint.
+
+        Sequential-only cold bytes — read by merges, never by probes.
+        """
+        return (self.capacity * self.p + 7) // 8
+
+    @property
+    def canon(self) -> tuple[int, int]:
+        return canonical_split(self.p)
+
+
+def make_config(
+    capacity: int,
+    p: int,
+    fp_bits: int | None = None,
+    seed: int = 0,
+    segment_length: int | None = None,
+) -> FuseConfig:
+    """Size a fuse table for ``capacity`` keys via the cost-model geometry."""
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    canonical_split(p)  # validates p
+    L = segment_length or cost_model.fuse_segment_length(capacity)
+    if L & (L - 1) or L < 2:
+        raise ValueError("segment_length must be a power of two >= 2")
+    C = cost_model.fuse_segment_count(capacity, L)
+    if C >= 1 << 15:
+        raise ValueError("segment_count too large for the 32-bit start mix")
+    if fp_bits is None:
+        fp_bits = cost_model.fuse_fp_bits_for(min(32, p - 1))
+    if not (1 <= fp_bits <= 28):
+        raise ValueError(f"fp_bits must be in [1, 28], got {fp_bits}")
+    return FuseConfig(
+        p=p,
+        fp_bits=fp_bits,
+        segment_length=L,
+        segment_count=C,
+        capacity=capacity,
+        seed=seed,
+    )
+
+
+class FuseState(NamedTuple):
+    """Device state of one frozen level (pure pytree).
+
+    ``table`` is the probe structure; ``run_q``/``run_r`` the retained
+    sorted fingerprint run in the canonical split (sentinel-padded to
+    ``cfg.capacity``); ``fuse_seed`` the construction seed that peeled
+    (a device scalar so probes stay jittable across retries).
+    """
+
+    table: jnp.ndarray  # uint32 (slots,)
+    run_q: jnp.ndarray  # int32 (capacity,) canonical quotients, sorted
+    run_r: jnp.ndarray  # uint32 (capacity,) canonical remainders
+    n: jnp.ndarray  # int32 scalar, multiset size
+    n_unique: jnp.ndarray  # int32 scalar
+    fuse_seed: jnp.ndarray  # int32 scalar
+    overflow: jnp.ndarray  # bool scalar (capacity exceeded upstream)
+
+
+def empty(cfg: FuseConfig) -> FuseState:
+    return FuseState(
+        table=jnp.zeros((cfg.slots,), jnp.uint32),
+        run_q=jnp.full((cfg.capacity,), INT32_MAX, jnp.int32),
+        run_r=jnp.full((cfg.capacity,), UINT32_MAX, jnp.uint32),
+        n=jnp.zeros((), jnp.int32),
+        n_unique=jnp.zeros((), jnp.int32),
+        fuse_seed=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hashing: canonical fingerprint -> (3 cell positions, stored fp)
+# ---------------------------------------------------------------------------
+
+
+def _mulhi_seg(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """floor(x * m / 2**32) for uint32 lanes and python int m < 2**15."""
+    mm = jnp.uint32(m)
+    lo = (x & jnp.uint32(0xFFFF)) * mm
+    hi = (x >> jnp.uint32(16)) * mm
+    return (hi + (lo >> jnp.uint32(16))) >> jnp.uint32(16)
+
+
+def fuse_hash(cfg: FuseConfig, fq, fr, fuse_seed):
+    """Canonical-split fingerprints -> (pos0, pos1, pos2, fp).
+
+    Positions are cells in three *consecutive* segments
+    ``start .. start+2`` — the locality the batched probe kernel tiles.
+    ``fuse_seed`` may be a device scalar (construction retries).
+    """
+    L = cfg.segment_length
+    s = jnp.asarray(fuse_seed).astype(jnp.uint32)
+    a = fmix32(jnp.asarray(fq).astype(jnp.uint32) ^ fmix32(s ^ _GOLD1))
+    b = fmix32(jnp.asarray(fr).astype(jnp.uint32) ^ fmix32(s + _GOLD2))
+    h1 = fmix32(a ^ (b * _MUL1))
+    h2 = fmix32(b + (a * _MUL2))
+    h3 = fmix32(h1 ^ (h2 * _MUL1))
+    h4 = fmix32(h2 ^ (h3 * _MUL2))
+
+    start = _mulhi_seg(h1, cfg.segment_count).astype(jnp.int32)
+    mask = jnp.uint32(L - 1)
+    off0 = (h2 & mask).astype(jnp.int32)
+    off1 = ((h2 >> jnp.uint32(16)) & mask).astype(jnp.int32)
+    off2 = (h3 & mask).astype(jnp.int32)
+    fp = h4 >> jnp.uint32(32 - cfg.fp_bits)
+
+    p0 = start * L + off0
+    p1 = (start + 1) * L + off1
+    p2 = (start + 2) * L + off2
+    return p0, p1, p2, fp
+
+
+def key_fingerprints(cfg: FuseConfig, keys: jnp.ndarray):
+    """Keys -> canonical-split fingerprints (same hash as the QF families)."""
+    qc, rc = cfg.canon
+    return fingerprint(keys, qc, rc, cfg.seed)
+
+
+# ---------------------------------------------------------------------------
+# Construction: host-side parallel peel + device-side batched assignment
+# ---------------------------------------------------------------------------
+
+
+def _peel_rounds(h0, h1, h2, slots: int):
+    """Parallel peeling of the 3-uniform hypergraph (host, numpy).
+
+    Returns a list of (key_indices, assigned_cell) rounds in peel order,
+    or None when the graph has a 2-core (caller retries with a new seed).
+    Each round removes every key incident to a degree-1 cell; random
+    hypergraphs below the peeling threshold drain in O(log n) rounds.
+    """
+    nu = h0.shape[0]
+    deg = np.zeros(slots, np.int64)
+    for h in (h0, h1, h2):
+        np.add.at(deg, h, 1)
+    alive = np.ones(nu, bool)
+    rounds = []
+    remaining = nu
+    while remaining:
+        single = deg == 1
+        can = alive & (single[h0] | single[h1] | single[h2])
+        idx = np.nonzero(can)[0]
+        if idx.size == 0:
+            return None  # 2-core: this seed cannot peel
+        s0, s1, s2 = h0[idx], h1[idx], h2[idx]
+        cell = np.where(single[s0], s0, np.where(single[s1], s1, s2))
+        rounds.append((idx, cell))
+        alive[idx] = False
+        remaining -= idx.size
+        for h in (s0, s1, s2):
+            np.add.at(deg, h, -1)
+    return rounds
+
+
+def freeze(cfg: FuseConfig, fq, fr, n, max_attempts: int = MAX_PEEL_ATTEMPTS):
+    """Build a frozen filter from a sorted canonical fingerprint stream.
+
+    ``(fq, fr)`` follow the extract/_pad_sort convention: first ``n``
+    entries are the lexicographically sorted multiset, padding is
+    sentinels.  Host-level (the peel order is data-dependent), like the
+    protocol's other structural ops; the per-round assignment batches
+    run on device.  Retries fresh hash seeds until the graph peels.
+    """
+    n = int(n)
+    if n > cfg.capacity:
+        raise ValueError(
+            f"stream of {n} fingerprints exceeds frozen capacity "
+            f"{cfg.capacity}; grow/resize the level first"
+        )
+    nq = np.asarray(fq[: cfg.capacity]).astype(np.int32)
+    nr = np.asarray(fr[: cfg.capacity]).astype(np.uint32)
+    if nq.shape[0] < cfg.capacity:  # short stream: pad the stored run
+        pad = cfg.capacity - nq.shape[0]
+        nq = np.concatenate([nq, np.full(pad, np.iinfo(np.int32).max, np.int32)])
+        nr = np.concatenate([nr, np.full(pad, 0xFFFFFFFF, np.uint32)])
+    nq[n:] = np.iinfo(np.int32).max
+    nr[n:] = np.uint32(0xFFFFFFFF)
+
+    # dedup: identical p-bit fingerprints are one hyperedge (membership
+    # is identical; the run keeps the multiset for merges/stats)
+    keep = np.ones(n, bool)
+    if n > 1:
+        keep[1:] = (nq[1:n] != nq[: n - 1]) | (nr[1:n] != nr[: n - 1])
+    uq = jnp.asarray(nq[:n][keep])
+    ur = jnp.asarray(nr[:n][keep])
+    nu = int(keep.sum())
+
+    table = jnp.zeros((cfg.slots,), jnp.uint32)
+    fuse_seed = 0
+    if nu:
+        for attempt in range(max_attempts):
+            fuse_seed = (cfg.seed * 0x9E3779B1 + attempt * 0x85EBCA6B) & 0x7FFFFFFF
+            p0, p1, p2, fp = fuse_hash(cfg, uq, ur, fuse_seed)
+            h0 = np.asarray(p0)
+            h1 = np.asarray(p1)
+            h2 = np.asarray(p2)
+            rounds = _peel_rounds(h0, h1, h2, cfg.slots)
+            if rounds is not None:
+                break
+        else:
+            raise RuntimeError(
+                f"binary-fuse peeling failed after {max_attempts} seeds "
+                f"(n_unique={nu}, slots={cfg.slots}) — table undersized?"
+            )
+        # reverse-round assignment: each batch reads final neighbor cells
+        for idx, cell in reversed(rounds):
+            i = jnp.asarray(idx)
+            c = jnp.asarray(cell)
+            v = fp[i] ^ table[p0[i]] ^ table[p1[i]] ^ table[p2[i]]
+            table = table.at[c].set(v)
+
+    return FuseState(
+        table=table,
+        run_q=jnp.asarray(nq),
+        run_r=jnp.asarray(nr),
+        n=jnp.asarray(n, jnp.int32),
+        n_unique=jnp.asarray(nu, jnp.int32),
+        fuse_seed=jnp.asarray(fuse_seed, jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+def freeze_keys(cfg: FuseConfig, keys: jnp.ndarray) -> FuseState:
+    """Freeze a raw key batch (standalone construction path)."""
+    fq, fr = key_fingerprints(cfg, keys)
+    order = np.lexsort((np.asarray(fr), np.asarray(fq)))
+    return freeze(cfg, np.asarray(fq)[order], np.asarray(fr)[order], keys.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Probe (reference; the Pallas path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def lookup_fp(cfg: FuseConfig, state: FuseState, fq, fr):
+    """MAY-CONTAIN for canonical-split fingerprints: 3 gathers + xor.
+
+    Jittable; no false negatives by construction (every member edge's
+    xor equation holds exactly).
+    """
+    p0, p1, p2, fp = fuse_hash(cfg, fq, fr, state.fuse_seed)
+    got = state.table[p0] ^ state.table[p1] ^ state.table[p2]
+    return (state.n > 0) & (got == fp)
+
+
+def contains(cfg: FuseConfig, state: FuseState, keys: jnp.ndarray):
+    fq, fr = key_fingerprints(cfg, keys)
+    return lookup_fp(cfg, state, fq, fr)
+
+
+def extract_run(cfg: FuseConfig, state: FuseState):
+    """The stored sorted run: ``(fq, fr, n)`` in the canonical split.
+
+    This is the re-expansion path: a merge that consumes a frozen level
+    streams these fingerprints back out exactly (the QF ``extract``
+    analogue, without a decode — the run is stored directly).
+    """
+    return state.run_q, state.run_r, state.n

@@ -34,18 +34,36 @@ class PipelineConfig:
     dedup_fanout: int = 4
     dedup_levels: int = 3  # static disk-level depth of the cascade
     dedup_chunk: int = 1024  # incremental-migration chunk (qf family)
+    # cascade cold-tier demotion: depth below which merged-down levels
+    # freeze into binary-fuse form; "auto" asks the cost model
+    # (``cost_model.recommend_frozen_below``), None keeps all-QF levels.
+    # Frozen dedup filters cannot delete, which this pipeline never does.
+    dedup_frozen_below: "int | str | None" = None
     duplicate_fraction: float = 0.3  # synthetic corpus duplication rate
     doc_len_range: tuple = (64, 512)
     seed: int = 0
 
     def dedup_spec(self) -> dict:
         if self.dedup_family == "cascade":
-            return dict(
+            spec = dict(
                 ram_q=self.dedup_ram_q,
                 p=self.dedup_p,
                 fanout=self.dedup_fanout,
                 levels=self.dedup_levels,
             )
+            fb = self.dedup_frozen_below
+            if fb == "auto":
+                from repro.core import cost_model
+
+                fb = cost_model.recommend_frozen_below(
+                    self.dedup_ram_q,
+                    self.dedup_p,
+                    fanout=self.dedup_fanout,
+                    levels=self.dedup_levels,
+                )
+            if fb is not None:
+                spec["frozen_below"] = fb
+            return spec
         if self.dedup_family == "qf":
             return dict(q=self.dedup_ram_q, r=self.dedup_p - self.dedup_ram_q)
         raise ValueError(f"no dedup spec mapping for {self.dedup_family!r}")

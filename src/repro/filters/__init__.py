@@ -75,10 +75,36 @@ from . import (  # noqa: F401 (registration side effects)
     iostats,
     qf_filter,
     sharded,
+    xor_fuse,
 )
 from .auto_scale import auto_scale, settle
 from .iostats import IOCounters, to_iolog
-from .registry import FilterImpl, by_cfg, by_name, names, register
+from .registry import (
+    FilterImpl,
+    UnsupportedOpError,
+    by_cfg,
+    by_name,
+    names,
+    register,
+)
+
+# every op name ``supports`` answers for; "insert" is optional since the
+# frozen (xor_fuse) family is construct-only
+_OPS = frozenset(
+    {
+        "insert",
+        "contains",
+        "delete",
+        "merge",
+        "probe",
+        "stats",
+        "needs_resize",
+        "grow",
+        "resize",
+        "needs_shrink",
+        "shrink",
+    }
+)
 
 
 def make(name: str, **spec):
@@ -87,8 +113,11 @@ def make(name: str, **spec):
 
 
 def insert(cfg, state, keys, k=None):
-    """Insert a key batch; ``k`` = optional valid-prefix count for padded batches."""
-    return by_cfg(cfg).insert(cfg, state, keys, k)
+    """Insert a key batch; ``k`` = optional valid-prefix count for padded batches.
+
+    Frozen (construct-only) families raise :class:`UnsupportedOpError`.
+    """
+    return by_cfg(cfg).require("insert")(cfg, state, keys, k)
 
 
 def contains(cfg, state, keys):
@@ -98,20 +127,12 @@ def contains(cfg, state, keys):
 
 def delete(cfg, state, keys, k=None):
     """Remove one copy of each key (check ``supports(cfg, "delete")``)."""
-    impl = by_cfg(cfg)
-    if not impl.deletable(cfg):
-        raise NotImplementedError(
-            f"{impl.name} does not support delete for this config"
-        )
-    return impl.delete(cfg, state, keys, k)
+    return by_cfg(cfg).require("delete", cfg)(cfg, state, keys, k)
 
 
 def merge(cfg, state_a, state_b):
     """Union two same-config filters into one state."""
-    impl = by_cfg(cfg)
-    if impl.merge is None:
-        raise NotImplementedError(f"{impl.name} does not support merge")
-    return impl.merge(cfg, state_a, state_b)
+    return by_cfg(cfg).require("merge")(cfg, state_a, state_b)
 
 
 def probe(cfg, state, keys):
@@ -155,10 +176,7 @@ def grow(cfg, state):
     doubling).  Host-level — array shapes change — but the data
     movement is a single streaming device pass.
     """
-    impl = by_cfg(cfg)
-    if impl.grow is None:
-        raise NotImplementedError(f"{impl.name} does not support grow")
-    return impl.grow(cfg, state)
+    return by_cfg(cfg).require("grow")(cfg, state)
 
 
 def resize(cfg, state, **kw):
@@ -168,10 +186,7 @@ def resize(cfg, state, **kw):
     ``resize(cfg, state, levels=6, fanout=4)`` (cascade),
     ``resize(cfg, state, factor=4)`` (bloom / blocked_bloom).
     Returns the new ``(cfg, state)`` pair."""
-    impl = by_cfg(cfg)
-    if impl.resize is None:
-        raise NotImplementedError(f"{impl.name} does not support resize")
-    return impl.resize(cfg, state, **kw)
+    return by_cfg(cfg).require("resize")(cfg, state, **kw)
 
 
 def needs_shrink(cfg, state):
@@ -200,10 +215,7 @@ def shrink(cfg, state):
     redistributes shard pairs and halves the shard count, bloom folds
     its doubled cell tiling back together.  Host-level — shapes change.
     """
-    impl = by_cfg(cfg)
-    if impl.shrink is None:
-        raise NotImplementedError(f"{impl.name} does not support shrink")
-    return impl.shrink(cfg, state)
+    return by_cfg(cfg).require("shrink")(cfg, state)
 
 
 def auto_grow(cfg, state, keys, k=None, max_steps: int = 32):
@@ -237,7 +249,7 @@ def auto_grow(cfg, state, keys, k=None, max_steps: int = 32):
 
     if can:
         cfg, state = settle(cfg, state)
-    state = impl.insert(cfg, state, keys, k)
+    state = impl.require("insert")(cfg, state, keys, k)
     if can:
         cfg, state = settle(cfg, state)
     return cfg, state
@@ -250,7 +262,14 @@ def supports(name_or_cfg, op: str) -> bool:
 
     Passing a cfg instance gives the config-exact answer (e.g. delete on
     a plain non-counting Bloom is False); a name answers for the family.
+    Unknown op names raise ``ValueError`` (they used to fall through to
+    ``getattr`` and leak an ``AttributeError`` — or worse, silently
+    answer False for a typo'd op).
     """
+    if op not in _OPS:
+        raise ValueError(
+            f"unknown filter op {op!r}; known ops: {', '.join(sorted(_OPS))}"
+        )
     if isinstance(name_or_cfg, str):
         return getattr(by_name(name_or_cfg), op) is not None
     impl = by_cfg(name_or_cfg)
@@ -262,6 +281,7 @@ def supports(name_or_cfg, op: str) -> bool:
 __all__ = [
     "FilterImpl",
     "IOCounters",
+    "UnsupportedOpError",
     "auto_grow",
     "auto_scale",
     "by_cfg",

@@ -87,7 +87,7 @@ def auto_scale(
                 shrink=shrink,
                 max_steps=max_steps,
             )
-        state = impl.insert(cfg, state, keys, k)
+        state = impl.require("insert")(cfg, state, keys, k)
         if bool(incremental_resize.needs_settle(cfg, state)):
             cfg, state = incremental_resize.finish(cfg, state)
         return cfg, state
@@ -114,7 +114,7 @@ def auto_scale(
             )
         cfg, state = _settle_up(impl, cfg, state, max_steps)
 
-    state = impl.insert(cfg, state, keys, k)
+    state = impl.require("insert")(cfg, state, keys, k)
 
     if can_up and bool(impl.needs_resize(cfg, state)):
         if use_incremental:

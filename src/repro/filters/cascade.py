@@ -23,21 +23,39 @@ the depth is no longer a hard ceiling: ``needs_resize`` flags the
 approaching saturation on device and ``grow`` deepens the stack by one
 level (a host-level structural step; the façade's ``auto_grow`` ingest
 driver composes the two).
+
+**Frozen cold tier** (``frozen_below=k``): levels at depth >= k are
+demoted to binary-fuse form (``repro.core.fuse_filter``) — a level is
+write-once between merge-downs, so immutability costs nothing there,
+and the fuse table is ~20-30% smaller than the QF at the same fp-rate
+target with a fixed 3-read probe.  A merge-down whose target is frozen
+peels the merged stream into a fuse table; a later merge that
+*consumes* a frozen level re-expands it from its retained sorted
+fingerprint run, so merge/grow/shrink/``auto_scale`` keep composing
+and membership stays exact across demote -> probe -> re-expand ->
+merge.  The price is structural: peeling is data-dependent host work,
+so a frozen cascade's insert/merge/resize run host-driven (one sync at
+the collapse decision) instead of under ``lax.scan`` — the right trade
+for cold serving tiers, not for the zero-sync ingest path.  Deletes
+are refused (``UnsupportedOpError``): a fuse table cannot unlink a
+key.  ``cost_model.recommend_frozen_below`` picks k from the geometry.
 """
 
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import cost_model
+from repro.core import fuse_filter as fuse
 from repro.core import quotient_filter as qf
 
 from . import iostats, qf_filter
 from .iostats import IOCounters
-from .registry import FilterImpl, register
+from .registry import FilterImpl, UnsupportedOpError, register
 
 
 class CascadeConfig(NamedTuple):
@@ -49,10 +67,40 @@ class CascadeConfig(NamedTuple):
     max_load: float = 0.75
     backend: str = "reference"
     shrink_load: float = 0.5  # low watermark vs the one-shallower stack
+    frozen_below: Optional[int] = None  # demote levels >= this depth to fuse form
+    fuse_bits: Optional[int] = None  # frozen cell width override (default: match QF fp)
 
     @property
     def lb(self) -> int:
         return int(math.log2(self.fanout))
+
+    def is_frozen(self, i: int) -> bool:
+        return self.frozen_below is not None and i >= self.frozen_below
+
+    def fuse_cfg(self, i: int) -> fuse.FuseConfig:
+        """Frozen geometry of level i: sized for the level's design
+        capacity, cell width matching the QF level's fp-rate target."""
+        lvl = self.level_cfg(i)
+        fp_bits = self.fuse_bits or cost_model.fuse_fp_bits_for(lvl.r, self.max_load)
+        return fuse.make_config(lvl.capacity, self.p, fp_bits=fp_bits, seed=self.seed)
+
+    def level_size_bytes(self, i: int) -> int:
+        """Probe-structure bytes of level i (fuse table when frozen)."""
+        return (
+            self.fuse_cfg(i).size_bytes
+            if self.is_frozen(i)
+            else self.level_cfg(i).size_bytes
+        )
+
+    @property
+    def cold_run_bytes(self) -> int:
+        """Sequential-only re-expansion runs of the frozen levels —
+        merge-path bytes, never touched by probes."""
+        return sum(
+            self.fuse_cfg(i).run_bytes
+            for i in range(self.levels)
+            if self.is_frozen(i)
+        )
 
     def _cfg(self, q: int) -> qf.QFConfig:
         return qf.QFConfig(
@@ -73,7 +121,7 @@ class CascadeConfig(NamedTuple):
     @property
     def size_bytes(self) -> int:
         return self.q0_cfg.size_bytes + sum(
-            self.level_cfg(i).size_bytes for i in range(self.levels)
+            self.level_size_bytes(i) for i in range(self.levels)
         )
 
 
@@ -83,15 +131,128 @@ class CascadeState(NamedTuple):
     io: IOCounters
 
 
+def _empty_level(cfg: CascadeConfig, i: int):
+    if cfg.is_frozen(i):
+        return fuse.empty(cfg.fuse_cfg(i))
+    return qf.empty(cfg.level_cfg(i))
+
+
 def make(**spec):
     cfg = CascadeConfig(**spec)
     _check_geometry(cfg)
     qf_filter._check_backend(cfg)
     return cfg, CascadeState(
         q0=qf.empty(cfg.q0_cfg),
-        levels=tuple(qf.empty(cfg.level_cfg(i)) for i in range(cfg.levels)),
+        levels=tuple(_empty_level(cfg, i) for i in range(cfg.levels)),
         io=iostats.zeros(),
     )
+
+
+# ---------------------------------------------------------------------------
+# Frozen-tier plumbing: canonical streams in, fuse/QF levels out
+# ---------------------------------------------------------------------------
+
+
+def _canon_cfg(cfg: CascadeConfig) -> qf.QFConfig:
+    """The canonical (q, r) split all cross-level streams are carried in
+    (``fuse.canonical_split``); only q/r are read — never materialized."""
+    qc, rc = fuse.canonical_split(cfg.p)
+    return qf.QFConfig(q=qc, r=rc, slack=0, seed=cfg.seed, max_load=cfg.max_load)
+
+
+def _level_stream(cfg: CascadeConfig, state: CascadeState, i: int):
+    """Level i as a sorted canonical fingerprint stream ``(fq, fr, n)``.
+
+    QF levels decode + requotient (order-preserving); frozen levels
+    stream their retained run directly — the re-expansion path.
+    """
+    s = state.levels[i]
+    if cfg.is_frozen(i):
+        return fuse.extract_run(cfg.fuse_cfg(i), s)
+    c = cfg.level_cfg(i)
+    fq, fr, n = qf.extract(c, s)
+    fq, fr = qf._requotient(fq, fr, c, _canon_cfg(cfg))
+    return fq, fr, n
+
+
+def _q0_stream(cfg: CascadeConfig, state: CascadeState):
+    fq, fr, n = qf.extract(cfg.q0_cfg, state.q0)
+    fq, fr = qf._requotient(fq, fr, cfg.q0_cfg, _canon_cfg(cfg))
+    return fq, fr, n
+
+
+def _build_level(cfg: CascadeConfig, i: int, allq, allr, total: int, overflow: bool):
+    """Materialize level i from a sorted canonical stream (host-level)."""
+    if cfg.is_frozen(i):
+        st = fuse.freeze(cfg.fuse_cfg(i), allq, allr, total)
+        return st._replace(overflow=st.overflow | jnp.asarray(overflow))
+    tgt = cfg.level_cfg(i)
+    tq, tr = qf._requotient(allq, allr, _canon_cfg(cfg), tgt)
+    built = qf_filter.build_fn(cfg)(tgt, tq, tr, jnp.asarray(total, jnp.int32))
+    return built._replace(overflow=built.overflow | jnp.asarray(overflow))
+
+
+def _level_read_bytes(cfg: CascadeConfig, i: int) -> float:
+    """Merge-path read cost of consuming level i: QF levels stream their
+    table; frozen levels stream only their run (the table is not read)."""
+    return (
+        cfg.fuse_cfg(i).run_bytes if cfg.is_frozen(i) else cfg.level_cfg(i).size_bytes
+    )
+
+
+def _level_write_bytes(cfg: CascadeConfig, i: int) -> float:
+    return cfg.level_size_bytes(i) + (
+        cfg.fuse_cfg(i).run_bytes if cfg.is_frozen(i) else 0
+    )
+
+
+def _collapse_host(cfg: CascadeConfig, state: CascadeState) -> CascadeState:
+    """Host-driven merge-down for frozen cascades (peeling is
+    data-dependent, so the device ``lax.switch`` path cannot demote).
+    Same collapse rule as ``_maybe_collapse``; returns the state
+    unchanged when no level fits."""
+    counts = [int(s.n) for s in state.levels]
+    cum = int(state.q0.n)
+    target = None
+    for i in range(cfg.levels):
+        cum += counts[i]
+        if cum <= cfg.level_cfg(i).capacity:
+            target = i
+            break
+    if target is None:
+        return state  # Q0 absorbs into its slack; overflow flags the rest
+
+    parts = [_q0_stream(cfg, state)]
+    overflow = bool(state.q0.overflow)
+    read = 0.0
+    for j in range(target + 1):
+        parts.append(_level_stream(cfg, state, j))
+        overflow = overflow or bool(state.levels[j].overflow)
+        if counts[j] > 0:
+            read += _level_read_bytes(cfg, j)
+    allq, allr = qf._pad_sort(
+        jnp.concatenate([p[0] for p in parts]),
+        jnp.concatenate([p[1] for p in parts]),
+        jnp.concatenate(
+            [jnp.arange(p[0].shape[0]) < p[2] for p in parts]
+        ),
+    )
+    total = cum
+    merged = _build_level(cfg, target, allq, allr, total, overflow)
+    io = state.io._replace(
+        seq_read_bytes=state.io.seq_read_bytes + jnp.float32(read),
+        seq_write_bytes=state.io.seq_write_bytes
+        + jnp.float32(_level_write_bytes(cfg, target)),
+        flushes=state.io.flushes + 1,
+        merges=state.io.merges + 1,
+    )
+    new_levels = tuple(
+        _empty_level(cfg, j)
+        if j < target
+        else (merged if j == target else state.levels[j])
+        for j in range(cfg.levels)
+    )
+    return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=new_levels, io=io)
 
 
 def _collapse_into(cfg: CascadeConfig, state: CascadeState, i: int) -> CascadeState:
@@ -141,7 +302,14 @@ def _maybe_collapse(cfg: CascadeConfig, state: CascadeState, full) -> CascadeSta
 def insert(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
     q0 = qf_filter.insert_keys(cfg.q0_cfg, cfg.backend, state.q0, keys, k)
     state = state._replace(q0=q0)
-    return _maybe_collapse(cfg, state, qf.load(cfg.q0_cfg, q0) >= cfg.max_load)
+    full = qf.load(cfg.q0_cfg, q0) >= cfg.max_load
+    if cfg.frozen_below is None:
+        return _maybe_collapse(cfg, state, full)
+    # frozen mode: the merge-down peels, which is host work — one sync
+    # at the collapse decision instead of the zero-sync lax.switch path
+    if bool(full):
+        state = _collapse_host(cfg, state)
+    return state
 
 
 def _structures(cfg, state):
@@ -150,37 +318,56 @@ def _structures(cfg, state):
         yield cfg.level_cfg(i), state.levels[i]
 
 
+def _level_contains(cfg: CascadeConfig, state, i: int, keys):
+    s = state.levels[i]
+    if cfg.is_frozen(i):
+        fc = cfg.fuse_cfg(i)
+        if cfg.backend == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.fuse_contains(fc, s, keys)
+        return fuse.contains(fc, s, keys)  # carries its own n > 0 guard
+    c = cfg.level_cfg(i)
+    return jax.lax.cond(
+        s.n > 0,
+        lambda: qf_filter.contains_keys(c, cfg.backend, s, keys),
+        lambda: jnp.zeros(keys.shape[0], jnp.bool_),
+    )
+
+
 def contains(cfg: CascadeConfig, state, keys):
-    hit = jnp.zeros(keys.shape[0], jnp.bool_)
-    for c, s in _structures(cfg, state):
-        lvl = jax.lax.cond(
-            s.n > 0,
-            lambda s=s, c=c: qf_filter.contains_keys(c, cfg.backend, s, keys),
-            lambda: jnp.zeros(keys.shape[0], jnp.bool_),
-        )
-        hit = hit | lvl
+    hit = jax.lax.cond(
+        state.q0.n > 0,
+        lambda: qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys),
+        lambda: jnp.zeros(keys.shape[0], jnp.bool_),
+    )
+    for i in range(cfg.levels):
+        hit = hit | _level_contains(cfg, state, i, keys)
     return hit
 
 
 def probe(cfg: CascadeConfig, state, keys):
-    """Lookup with the paper's schedule: one random page read per
-    non-empty disk level for every query still unresolved at that level
-    (top-down short-circuit)."""
+    """Lookup with the paper's schedule: per query still unresolved at a
+    non-empty disk level, one random page read (QF cluster) or
+    ``cost_model.FUSE_PROBE_READS`` independent gathers (frozen level),
+    top-down short-circuit.  Matches ``cost_model.cascade_probe_reads``."""
     hit = qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys)
     reads = jnp.zeros((), jnp.int32)
     for i in range(cfg.levels):
-        c, s = cfg.level_cfg(i), state.levels[i]
+        s = state.levels[i]
         pending = ~hit
         nonempty = s.n > 0
+        per_query = (
+            cost_model.FUSE_PROBE_READS
+            if cfg.is_frozen(i)
+            else cost_model.QF_PROBE_READS
+        )
         reads = reads + jnp.where(
-            nonempty, jnp.sum(pending, dtype=jnp.int32), jnp.int32(0)
-        )
-        lvl = jax.lax.cond(
             nonempty,
-            lambda s=s, c=c: qf_filter.contains_keys(c, cfg.backend, s, keys),
-            lambda: jnp.zeros(keys.shape[0], jnp.bool_),
+            per_query * jnp.sum(pending, dtype=jnp.int32),
+            jnp.int32(0),
         )
-        hit = hit | (pending & lvl)
+        hit = hit | (pending & _level_contains(cfg, state, i, keys))
     io = state.io._replace(rand_page_reads=state.io.rand_page_reads + reads)
     return state._replace(io=io), hit
 
@@ -196,6 +383,14 @@ def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
     schedule as ``probe``: one random page read per key targeted at a
     non-empty level (the cluster must be fetched) and one random page
     write per copy actually removed; Q0 deletes are RAM-only and free."""
+    if cfg.frozen_below is not None:
+        raise UnsupportedOpError(
+            "cascade",
+            "delete",
+            "frozen_below cascades cannot unlink keys from demoted "
+            "(binary-fuse) levels; use an all-QF cascade when the cold "
+            "tier must support deletes",
+        )
     valid = qf_filter.valid_mask(keys, k)
     structures = [(cfg.q0_cfg, state.q0)] + [
         (cfg.level_cfg(i), state.levels[i]) for i in range(cfg.levels)
@@ -251,7 +446,13 @@ def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
     in the deepest level's (q, r) split; requotienting is monotone
     w.r.t. lexicographic order, so each ``lax.switch`` branch only
     re-splits elementwise and rebuilds at its target geometry.
+
+    Frozen cascades take the host path instead: the target may need to
+    peel (and frozen inputs re-expand from their runs), which cannot
+    live under ``lax.switch``.
     """
+    if cfg.frozen_below is not None:
+        return _merge_host(cfg, sa, sb)
     L = cfg.levels
     deep = cfg.level_cfg(L - 1)
     build = qf_filter.build_fn(cfg)
@@ -305,6 +506,59 @@ def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
     return jax.lax.switch(branch, [mk(i) for i in range(L)], (allq, allr, io))
 
 
+def _restream_host(new_cfg: CascadeConfig, parts, io, overflow):
+    """Collapse canonical streams into the smallest fitting level of
+    ``new_cfg`` (host-level; the shared tail of frozen merge/resize).
+    ``parts`` is a list of ``(fq, fr, n)`` canonical streams."""
+    L = new_cfg.levels
+    total = sum(int(p[2]) for p in parts)
+    target = next(
+        (i for i in range(L) if total <= new_cfg.level_cfg(i).capacity), L - 1
+    )
+    if new_cfg.is_frozen(target) and total > new_cfg.fuse_cfg(target).capacity:
+        raise ValueError(
+            f"union of {total} keys exceeds the bottom frozen level's "
+            f"capacity {new_cfg.fuse_cfg(target).capacity}; grow/resize first"
+        )
+    allq, allr = qf._pad_sort(
+        jnp.concatenate([p[0] for p in parts]),
+        jnp.concatenate([p[1] for p in parts]),
+        jnp.concatenate([jnp.arange(p[0].shape[0]) < p[2] for p in parts]),
+    )
+    merged = _build_level(new_cfg, target, allq, allr, total, overflow)
+    io = io._replace(
+        seq_write_bytes=io.seq_write_bytes
+        + jnp.float32(_level_write_bytes(new_cfg, target)),
+        merges=io.merges + 1,
+    )
+    levels = tuple(
+        merged if j == target else _empty_level(new_cfg, j) for j in range(L)
+    )
+    return CascadeState(q0=qf.empty(new_cfg.q0_cfg), levels=levels, io=io)
+
+
+def _all_streams(cfg: CascadeConfig, state: CascadeState):
+    """Every component of one cascade as canonical streams, plus the
+    merge-path read bytes and the or'd overflow flag (host values)."""
+    parts = [_q0_stream(cfg, state)]
+    overflow = bool(state.q0.overflow)
+    read = 0.0
+    for j in range(cfg.levels):
+        parts.append(_level_stream(cfg, state, j))
+        overflow = overflow or bool(state.levels[j].overflow)
+        if int(state.levels[j].n) > 0:
+            read += _level_read_bytes(cfg, j)
+    return parts, read, overflow
+
+
+def _merge_host(cfg: CascadeConfig, sa: CascadeState, sb: CascadeState):
+    pa, ra, ova = _all_streams(cfg, sa)
+    pb, rb, ovb = _all_streams(cfg, sb)
+    io = iostats.add(sa.io, sb.io)
+    io = io._replace(seq_read_bytes=io.seq_read_bytes + jnp.float32(ra + rb))
+    return _restream_host(cfg, pa + pb, io, ova or ovb)
+
+
 def needs_resize(cfg: CascadeConfig, state):
     """Device predicate: a full Q0 could fail to collapse anywhere —
     i.e. Q0's capacity plus everything already on disk no longer fits
@@ -324,6 +578,12 @@ def _check_geometry(cfg: CascadeConfig) -> None:
         raise ValueError("need at least one disk level")
     if cfg.ram_q + (cfg.levels) * cfg.lb >= cfg.p:
         raise ValueError("fingerprint bits p too small for the deepest level")
+    if cfg.frozen_below is not None:
+        if cfg.frozen_below < 0:
+            raise ValueError("frozen_below must be a depth >= 0")
+        fuse.canonical_split(cfg.p)  # frozen levels carry canonical streams
+        for i in range(cfg.frozen_below, cfg.levels):
+            cfg.fuse_cfg(i)  # validates the per-level fuse geometry
 
 
 def grow(cfg: CascadeConfig, state):
@@ -338,7 +598,7 @@ def grow(cfg: CascadeConfig, state):
     _check_geometry(new_cfg)
     return new_cfg, CascadeState(
         q0=state.q0,
-        levels=state.levels + (qf.empty(new_cfg.level_cfg(cfg.levels)),),
+        levels=state.levels + (_empty_level(new_cfg, cfg.levels),),
         io=state.io._replace(resizes=state.io.resizes + 1),
     )
 
@@ -390,13 +650,21 @@ def resize(cfg: CascadeConfig, state, levels: int = None, fanout: int = None):
     _check_geometry(new_cfg)
     if new_cfg.fanout == cfg.fanout and new_cfg.levels >= cfg.levels:
         extra = tuple(
-            qf.empty(new_cfg.level_cfg(i)) for i in range(cfg.levels, new_cfg.levels)
+            _empty_level(new_cfg, i) for i in range(cfg.levels, new_cfg.levels)
         )
         return new_cfg, CascadeState(
             q0=state.q0,
             levels=state.levels + extra,
             io=state.io._replace(resizes=state.io.resizes + 1),
         )
+    if cfg.frozen_below is not None:
+        # frozen levels re-expand from their runs; one host re-stream
+        parts, read, overflow = _all_streams(cfg, state)
+        io = state.io._replace(
+            seq_read_bytes=state.io.seq_read_bytes + jnp.float32(read),
+            resizes=state.io.resizes + 1,
+        )
+        return new_cfg, _restream_host(new_cfg, parts, io, overflow)
     # geometry change: one streaming pass into the smallest fitting level
     total = int(state.q0.n) + sum(int(s.n) for s in state.levels)
     target = next(
@@ -436,7 +704,7 @@ def resize(cfg: CascadeConfig, state, levels: int = None, fanout: int = None):
 
 def stats(cfg: CascadeConfig, state):
     ns = jnp.stack([s.n for s in state.levels])
-    return {
+    out = {
         "n": state.q0.n + jnp.sum(ns),
         "q0_load": qf.load(cfg.q0_cfg, state.q0),
         "level_counts": ns,
@@ -446,6 +714,12 @@ def stats(cfg: CascadeConfig, state):
         "size_bytes": cfg.size_bytes,
         **state.io._asdict(),
     }
+    if cfg.frozen_below is not None:
+        frozen = [i for i in range(cfg.levels) if cfg.is_frozen(i)]
+        out["frozen_levels"] = len(frozen)
+        out["frozen_size_bytes"] = sum(cfg.level_size_bytes(i) for i in frozen)
+        out["cold_run_bytes"] = cfg.cold_run_bytes
+    return out
 
 
 IMPL = register(
@@ -465,5 +739,10 @@ IMPL = register(
         resize=resize,
         needs_shrink=needs_shrink,
         shrink=shrink,
+        can_delete=lambda cfg: cfg.frozen_below is None,
+        op_hints={
+            "delete": "frozen_below cascades cannot unlink keys from "
+            "demoted (binary-fuse) levels"
+        },
     )
 )

@@ -48,12 +48,33 @@ from __future__ import annotations
 from typing import Callable, NamedTuple, Optional
 
 
+class UnsupportedOpError(NotImplementedError):
+    """A filter family (or this particular config of it) rejects an op.
+
+    Structured — carries ``family``/``op``/``hint`` — so callers and
+    drivers (``auto_grow``, ``auto_scale``, pipelines) can branch on
+    capability rather than string-match a message or, worse, catch an
+    ``AttributeError`` escaping from a half-bound registry record.
+    Subclasses ``NotImplementedError`` so existing capability checks
+    keep working.
+    """
+
+    def __init__(self, family: str, op: str, hint: str = ""):
+        self.family = family
+        self.op = op
+        self.hint = hint
+        msg = f"filter family {family!r} does not support {op!r}"
+        if hint:
+            msg = f"{msg} ({hint})"
+        super().__init__(msg)
+
+
 class FilterImpl(NamedTuple):
     name: str
     paper_section: str
     cfg_cls: type
     make: Callable  # (**spec) -> (cfg, state)
-    insert: Callable  # (cfg, state, keys, k=None) -> state
+    insert: Optional[Callable]  # (cfg, state, keys, k=None) -> state; None = frozen
     contains: Callable  # (cfg, state, keys) -> bool[B]
     stats: Callable  # (cfg, state) -> dict
     delete: Optional[Callable] = None
@@ -67,6 +88,8 @@ class FilterImpl(NamedTuple):
     # config-dependent capability (e.g. bloom deletes only when counting);
     # None means "delete works for every cfg of this type"
     can_delete: Optional[Callable] = None  # (cfg) -> bool
+    # hint strings surfaced in UnsupportedOpError, keyed by op name
+    op_hints: dict = {}
 
     def deletable(self, cfg=None) -> bool:
         if self.delete is None:
@@ -78,6 +101,18 @@ class FilterImpl(NamedTuple):
     @property
     def supports_merge(self) -> bool:
         return self.merge is not None
+
+    def require(self, op: str, cfg=None) -> Callable:
+        """The bound op, or a structured :class:`UnsupportedOpError`.
+
+        The façade's single dispatch point for optional ops: family-level
+        absence (unbound op) and config-level refusal (``can_delete``)
+        both surface as the same typed error.
+        """
+        fn = getattr(self, op, None)
+        if fn is None or (op == "delete" and not self.deletable(cfg)):
+            raise UnsupportedOpError(self.name, op, self.op_hints.get(op, ""))
+        return fn
 
 
 _BY_NAME: dict[str, FilterImpl] = {}

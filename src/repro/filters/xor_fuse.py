@@ -1,0 +1,287 @@
+"""``xor_fuse`` — the frozen (construct-only) binary-fuse family.
+
+The seventh registry family, and the first *frozen* one: a binary-fuse
+filter (``repro.core.fuse_filter``) is built once from its key set and
+then answers ``contains``/``probe`` with exactly three table reads —
+~20-30% smaller than a QF holding the same set at the same fp-rate
+target, at the cost of mutability.  ``insert`` and ``delete`` are
+deliberately unbound: the façade surfaces them as a structured
+:class:`~repro.filters.registry.UnsupportedOpError` (the capability
+error path this family exists to exercise), and updates happen by
+*reconstruction* — ``merge`` two frozen filters, or ``extend`` one with
+a raw key batch; both re-peel from the retained sorted fingerprint
+runs, which is the family's write-path cost and the reason it backs the
+*cold* tier (see ``cascade.frozen_below``) rather than the ingest path.
+
+``backend="pallas"`` routes probes through the batched 3-gather kernel
+(``repro.kernels.fuse_probe``); the reference path is the plain jnp
+3-gather.  Everything observable (hits, stats, I/O counters) is
+backend-invariant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core import fuse_filter as fuse
+from repro.core import quotient_filter as qf
+
+from . import iostats
+from .iostats import IOCounters
+from .registry import FilterImpl, register
+
+BACKENDS = ("reference", "pallas")
+
+
+class XorFuseConfig(NamedTuple):
+    """Static geometry + backend (hashable; jit-static).
+
+    Field layout mirrors :class:`repro.core.fuse_filter.FuseConfig`
+    (``core`` rebuilds it) with the façade-level backend selector
+    appended, the same shape the QF families use.
+    """
+
+    p: int
+    fp_bits: int
+    segment_length: int
+    segment_count: int
+    capacity: int
+    seed: int = 0
+    backend: str = "reference"
+
+    @property
+    def core(self) -> fuse.FuseConfig:
+        return fuse.FuseConfig(
+            p=self.p,
+            fp_bits=self.fp_bits,
+            segment_length=self.segment_length,
+            segment_count=self.segment_count,
+            capacity=self.capacity,
+            seed=self.seed,
+        )
+
+    @property
+    def size_bytes(self) -> int:
+        """Probe-structure bytes (the resident, randomly-read tier)."""
+        return self.core.size_bytes
+
+    @property
+    def run_bytes(self) -> int:
+        """Retained-run bytes (sequential-only; read by reconstruction)."""
+        return self.core.run_bytes
+
+    @property
+    def bits_per_key(self) -> float:
+        return self.core.slots * self.fp_bits / max(self.capacity, 1)
+
+
+class XorFuseState(NamedTuple):
+    core: fuse.FuseState
+    io: IOCounters
+
+
+def _cfg_from_core(core: fuse.FuseConfig, backend: str) -> XorFuseConfig:
+    return XorFuseConfig(*core, backend=backend)
+
+
+def make(
+    capacity: Optional[int] = None,
+    p: int = 26,
+    keys=None,
+    fp_bits: Optional[int] = None,
+    seed: int = 0,
+    backend: str = "reference",
+    segment_length: Optional[int] = None,
+    segment_count: Optional[int] = None,
+):
+    """Construct a frozen filter: ``make(keys=...)`` builds it outright,
+    ``make(capacity=...)`` sizes an empty one for later ``merge``/
+    ``extend`` unions (both may be given; capacity must then cover the
+    keys).  ``segment_count`` is normally derived; accepting it keeps
+    ``make(**cfg._asdict())`` round-trips (pipeline snapshots) exact."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if capacity is None:
+        if keys is None:
+            raise ValueError("xor_fuse.make needs capacity=, keys=, or both")
+        capacity = max(int(keys.shape[0]), 1)
+    if segment_count is not None:
+        core = fuse.FuseConfig(
+            p=p,
+            fp_bits=fp_bits,
+            segment_length=segment_length,
+            segment_count=segment_count,
+            capacity=capacity,
+            seed=seed,
+        )
+    else:
+        core = fuse.make_config(
+            capacity, p, fp_bits=fp_bits, seed=seed, segment_length=segment_length
+        )
+    st = fuse.empty(core) if keys is None else fuse.freeze_keys(core, keys)
+    # construction streams the key set in and writes table + run out
+    io = iostats.zeros()
+    if keys is not None:
+        io = io._replace(
+            seq_write_bytes=jnp.float32(core.size_bytes + core.run_bytes),
+            flushes=jnp.int32(1),
+        )
+    return _cfg_from_core(core, backend), XorFuseState(core=st, io=io)
+
+
+def _lookup(cfg: XorFuseConfig, core_state: fuse.FuseState, keys):
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.fuse_contains(cfg.core, core_state, keys)
+    return fuse.contains(cfg.core, core_state, keys)
+
+
+def contains(cfg: XorFuseConfig, state: XorFuseState, keys):
+    return _lookup(cfg, state.core, keys)
+
+
+def probe(cfg: XorFuseConfig, state: XorFuseState, keys):
+    """``contains`` + the 3-read access schedule per query (the frozen
+    tier's probe cost — cf. ``cost_model.FUSE_PROBE_READS``)."""
+    hit = _lookup(cfg, state.core, keys)
+    reads = jnp.where(
+        state.core.n > 0,
+        jnp.int32(cost_model.FUSE_PROBE_READS * keys.shape[0]),
+        jnp.int32(0),
+    )
+    io = state.io._replace(rand_page_reads=state.io.rand_page_reads + reads)
+    return state._replace(io=io), hit
+
+
+def _refreeze(cfg: XorFuseConfig, fq, fr, n: int, io: IOCounters) -> XorFuseState:
+    if n > cfg.capacity:
+        raise ValueError(
+            f"union of {n} fingerprints exceeds frozen capacity "
+            f"{cfg.capacity}; make the filter with a larger capacity"
+        )
+    st = fuse.freeze(cfg.core, fq, fr, n)
+    io = io._replace(
+        seq_read_bytes=io.seq_read_bytes + jnp.float32(cfg.run_bytes),
+        seq_write_bytes=io.seq_write_bytes
+        + jnp.float32(cfg.size_bytes + cfg.run_bytes),
+        merges=io.merges + 1,
+    )
+    return XorFuseState(core=st, io=io)
+
+
+def merge(cfg: XorFuseConfig, sa: XorFuseState, sb: XorFuseState) -> XorFuseState:
+    """Union two frozen filters (same cfg): merge the retained sorted
+    runs in O(n) (no decode — frozen states store their streams
+    directly) and re-peel.  Host-level, like every structural op."""
+    mq, mr = qf.merge_streams(
+        sa.core.run_q,
+        sa.core.run_r,
+        sa.core.n,
+        sb.core.run_q,
+        sb.core.run_r,
+        sb.core.n,
+    )
+    n = int(sa.core.n) + int(sb.core.n)
+    return _refreeze(cfg, mq, mr, n, iostats.add(sa.io, sb.io))
+
+
+def extend(cfg: XorFuseConfig, state: XorFuseState, keys) -> XorFuseState:
+    """Union a frozen filter with a raw key batch — the explicit,
+    host-level write path (one full re-peel per call; batch your
+    updates).  This is reconstruction, not insertion: the façade's
+    ``insert`` stays an :class:`UnsupportedOpError` so hot ingest loops
+    cannot silently adopt an O(n)-per-batch structure."""
+    fq, fr = fuse.key_fingerprints(cfg.core, keys)
+    sq, sr = qf._pad_sort(fq, fr, jnp.ones(fq.shape[0], jnp.bool_))
+    mq, mr = qf.merge_streams(
+        state.core.run_q, state.core.run_r, state.core.n, sq, sr, keys.shape[0]
+    )
+    n = int(state.core.n) + int(keys.shape[0])
+    return _refreeze(cfg, mq, mr, n, state.io)
+
+
+def needs_resize(cfg: XorFuseConfig, state: XorFuseState):
+    return state.core.n >= jnp.int32(cfg.capacity)
+
+
+SHRINK_LOAD = 0.4  # QF-family hysteresis default; fixed (no config knob —
+# a frozen filter's shrink is an explicit host decision, never auto_scale's)
+
+
+def needs_shrink(cfg: XorFuseConfig, state: XorFuseState):
+    if cfg.capacity < 2:
+        return jnp.zeros((), jnp.bool_)
+    return state.core.n <= jnp.int32(int(SHRINK_LOAD * (cfg.capacity // 2)))
+
+
+def shrink(cfg: XorFuseConfig, state: XorFuseState):
+    """Halve the design capacity by one re-peel (fewer slots, same
+    fp_bits — unlike the QF's bit re-merge, the fp rate is unchanged)."""
+    return resize(cfg, state, capacity=max(cfg.capacity // 2, 1))
+
+
+def resize(cfg: XorFuseConfig, state: XorFuseState, capacity: int):
+    """Re-freeze at a new design capacity (host-level re-peel)."""
+    new_core = fuse.make_config(
+        capacity, cfg.p, fp_bits=cfg.fp_bits, seed=cfg.seed
+    )
+    if int(state.core.n) > capacity:
+        raise ValueError("new capacity below the current population")
+    st = fuse.freeze(new_core, state.core.run_q, state.core.run_r, int(state.core.n))
+    io = state.io._replace(
+        seq_read_bytes=state.io.seq_read_bytes + jnp.float32(cfg.run_bytes),
+        seq_write_bytes=state.io.seq_write_bytes
+        + jnp.float32(new_core.size_bytes + new_core.run_bytes),
+        resizes=state.io.resizes + 1,
+    )
+    return _cfg_from_core(new_core, cfg.backend), XorFuseState(core=st, io=io)
+
+
+def grow(cfg: XorFuseConfig, state: XorFuseState):
+    return resize(cfg, state, capacity=cfg.capacity * 2)
+
+
+def stats(cfg: XorFuseConfig, state: XorFuseState) -> dict:
+    return {
+        "n": state.core.n,
+        "n_unique": state.core.n_unique,
+        "overflow": state.core.overflow,
+        "load": state.core.n / jnp.float32(cfg.capacity),
+        "slots": cfg.core.slots,
+        "fp_bits": cfg.fp_bits,
+        "bits_per_key": cfg.bits_per_key,
+        "size_bytes": cfg.size_bytes,
+        "run_bytes": cfg.run_bytes,
+        **state.io._asdict(),
+    }
+
+
+IMPL = register(
+    FilterImpl(
+        name="xor_fuse",
+        paper_section="§4 cold levels, frozen (beyond-paper: binary fuse filter)",
+        cfg_cls=XorFuseConfig,
+        make=make,
+        insert=None,  # frozen: the façade raises UnsupportedOpError
+        contains=contains,
+        stats=stats,
+        delete=None,
+        merge=merge,
+        probe=probe,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
+        op_hints={
+            "insert": "frozen family — build with make(keys=...), or union "
+            "batches via merge()/xor_fuse.extend() (full re-peel per call)",
+            "delete": "frozen family — rebuild without the evicted keys, or "
+            "use a QF-backed family where deletes are hot-path",
+        },
+    )
+)

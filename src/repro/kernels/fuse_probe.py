@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: batched binary-fuse (3-gather) membership probe.
+
+A frozen level answers a query with exactly three cell reads — one per
+consecutive segment ``start .. start+2`` — xor'd against the query's
+fingerprint.  The TPU mapping mirrors ``qf_probe``: queries are sorted
+by their first position and tiled; each program serves T queries from a
+shared 2*wblk-cell window of the table whose aligned start is
+scalar-prefetched per tile.  Because the three touched segments are
+*consecutive*, one window covers all three gathers for every query in
+the tile — sorted queries turn the probe into a single linear pass over
+the table instead of 3B random gathers.
+
+The gathers themselves are branch-free one-hot contractions (a
+(T x window) iota compare per position), the same trick the QF probe
+kernel uses for its cluster decode.  Queries whose window residency
+fails (tile spans more segments than the window holds) flag overflow
+and the wrapper (ops.py) resolves them on the reference path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fuse_probe_kernel(
+    blk_ref,
+    wbase_ref,
+    tab_a,
+    tab_b,
+    p0_ref,
+    p1_ref,
+    p2_ref,
+    fp_ref,
+    hit_o,
+):
+    t = pl.program_id(0)
+    T = p0_ref.shape[1]
+    WT = 2 * tab_a.shape[1]
+
+    w = jnp.concatenate([tab_a[0, :], tab_b[0, :]])  # (WT,) int32 cells
+
+    base = wbase_ref[t]
+    r0 = p0_ref[0, :] - base  # (T,) window-relative positions
+    r1 = p1_ref[0, :] - base
+    r2 = p2_ref[0, :] - base
+
+    js = jax.lax.broadcasted_iota(jnp.int32, (T, WT), 1)
+
+    def gather(rel):  # one-hot contraction: w[rel] without dynamic indexing
+        return jnp.sum(jnp.where(js == rel[:, None], w[None, :], 0), axis=1)
+
+    got = gather(r0) ^ gather(r1) ^ gather(r2)
+    hit_o[0, :] = (got == fp_ref[0, :]).astype(jnp.int32)
+
+
+def fuse_probe_tiles(
+    table: jnp.ndarray,
+    p0_sorted: jnp.ndarray,
+    p1_sorted: jnp.ndarray,
+    p2_sorted: jnp.ndarray,
+    fp_sorted: jnp.ndarray,
+    *,
+    tile_t: int = 128,
+    wblk: int = 2048,
+    interpret: bool = True,
+):
+    """Probe position-sorted queries. Returns (hit, overflow) int32 (B,).
+
+    ``table`` is the int32 bit-pattern of the uint32 cell plane;
+    ``p0_sorted`` must be ascending and padded to a multiple of
+    ``tile_t`` (duplicate-last padding preserves sortedness).  Tiles
+    whose third-segment reach exceeds the 2*wblk window report overflow
+    for all their queries (resolved by the caller's reference path).
+    """
+    total = table.shape[0]
+    B = p0_sorted.shape[0]
+    assert B % tile_t == 0
+    n_tiles = B // tile_t
+
+    nbw = -(-total // wblk) + 1  # plus one zero block for clipped windows
+    tpad = nbw * wblk
+    tab2 = jnp.concatenate(
+        [table.astype(jnp.int32), jnp.zeros((tpad - total,), jnp.int32)]
+    ).reshape(nbw, wblk)
+
+    p0 = p0_sorted.reshape(n_tiles, tile_t)
+    p1 = p1_sorted.reshape(n_tiles, tile_t)
+    p2 = p2_sorted.reshape(n_tiles, tile_t)
+    fp2 = fp_sorted.astype(jnp.int32).reshape(n_tiles, tile_t)
+
+    blk = jnp.clip(p0[:, 0] // wblk, 0, nbw - 2).astype(jnp.int32)
+    wbase = blk * wblk
+    # all three positions of every query must land inside [wbase, wbase+2*wblk)
+    reach = jnp.maximum(jnp.max(p1, axis=1), jnp.max(p2, axis=1))
+    tile_fits = (reach - wbase) < (2 * wblk)
+
+    win = lambda off: pl.BlockSpec((1, wblk), lambda t, blk, wbase: (blk[t] + off, 0))
+    qspec = pl.BlockSpec((1, tile_t), lambda t, blk, wbase: (t, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[win(0), win(1)] + [qspec] * 4,
+        out_specs=[qspec],
+    )
+    (hit2,) = pl.pallas_call(
+        _fuse_probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tiles, tile_t), jnp.int32)],
+        interpret=interpret,
+    )(blk, wbase, tab2, tab2, p0, p1, p2, fp2)
+
+    ovf2 = jnp.broadcast_to((~tile_fits[:, None]).astype(jnp.int32), hit2.shape)
+    return hit2.reshape(B), ovf2.reshape(B)

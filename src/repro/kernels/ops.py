@@ -12,7 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import fuse_filter as ffc
 from repro.core import quotient_filter as qf
+from .fuse_probe import fuse_probe_tiles
 from .qf_build import qf_build_planes
 from .qf_probe import qf_probe_tiles
 
@@ -119,6 +121,59 @@ def lookup(
 def contains(cfg: qf.QFConfig, state: qf.QFState, keys: jnp.ndarray, **kw):
     fq, fr = qf.fingerprints(cfg, keys)
     return lookup(cfg, state, fq, fr, **kw)
+
+
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("interpret", "tile_t", "wblk")
+)
+def fuse_lookup(
+    cfg: ffc.FuseConfig,
+    state: ffc.FuseState,
+    fq: jnp.ndarray,
+    fr: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    tile_t: int = 128,
+    wblk: int = 2048,
+):
+    """Kernel-backed binary-fuse MAY-CONTAIN for canonical fingerprints.
+
+    Sorts queries by first position so tile windows stream the table;
+    tiles that outrun their window fall back to the reference 3-gather.
+    """
+    p0, p1, p2, fp = ffc.fuse_hash(cfg, fq, fr, state.fuse_seed)
+    B0 = p0.shape[0]
+    order = jnp.argsort(p0)
+    pad = (-B0) % tile_t
+    osort = jnp.concatenate([order, jnp.full((pad,), order[-1])]) if pad else order
+
+    hit_s, ovf_s = fuse_probe_tiles(
+        state.table.astype(jnp.int32),
+        p0[osort],
+        p1[osort],
+        p2[osort],
+        fp[osort],
+        tile_t=tile_t,
+        wblk=wblk,
+        interpret=interpret,
+    )
+    hit = jnp.zeros((B0,), jnp.int32).at[osort].set(hit_s, mode="drop")
+    ovf = jnp.zeros((B0,), jnp.int32).at[osort].max(ovf_s, mode="drop")
+
+    def resolve(args):
+        hit, ovf = args
+        exact = (state.table[p0] ^ state.table[p1] ^ state.table[p2]) == fp
+        return jnp.where(ovf > 0, exact, hit > 0)
+
+    present = jax.lax.cond(
+        jnp.any(ovf > 0), resolve, lambda a: a[0] > 0, (hit, ovf)
+    )
+    return (state.n > 0) & present
+
+
+def fuse_contains(cfg: ffc.FuseConfig, state: ffc.FuseState, keys: jnp.ndarray, **kw):
+    fq, fr = ffc.key_fingerprints(cfg, keys)
+    return fuse_lookup(cfg, state, fq, fr, **kw)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))

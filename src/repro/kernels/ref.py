@@ -78,3 +78,14 @@ def probe_ref(rem, occ, shf, con, fq, fr, window: int):
     ovf_nostart = occ_q & ~ovf_left & (cum[:, -1] < C)
     overflow = occ_q & (ovf_left | ovf_right | ovf_nostart)
     return present, overflow
+
+
+def fuse_probe_ref(table, p0, p1, p2, fp):
+    """Binary-fuse membership oracle: three gathers + xor + compare.
+
+    table: uint32 (slots,) fingerprint cells; p0/p1/p2: int32 (B,) cell
+    positions (already hashed — one per consecutive segment); fp: uint32
+    (B,) stored fingerprints.  Returns present bool (B,).  The caller
+    owns the empty-table (n == 0) guard.
+    """
+    return (table[p0] ^ table[p1] ^ table[p2]) == fp

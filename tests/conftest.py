@@ -10,10 +10,28 @@ the gate with a fresh random seed.  Local runs keep the randomized
 
 import os
 
+import jax
+import pytest
+
 try:
     from hypothesis import settings
 except ImportError:  # requirements-dev.txt installs it; degrade quietly
     settings = None
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop JAX's compiled-program caches between test modules.
+
+    A full-suite run accumulates hundreds of compiled programs across
+    modules; on CPU that pile-up can segfault a later large
+    ``lax.switch`` trace (reproducibly at suite scale, never in
+    isolation).  Per-module isolation costs some recompilation but
+    keeps every module's compile behavior independent of suite order.
+    """
+    yield
+    if hasattr(jax, "clear_caches"):  # jax >= 0.4.9; no-op guard below
+        jax.clear_caches()
 
 if settings is not None:
     settings.register_profile("ci", derandomize=True, deadline=None)

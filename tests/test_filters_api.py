@@ -30,8 +30,18 @@ CASES = {
         dict(ram_q=8, disk_q=12, p=24, backend="pallas"),
     ),
     "cascade": ("cascade", dict(ram_q=8, p=26, fanout=2, levels=3)),
+    "cascade_frozen": (
+        "cascade",
+        dict(ram_q=8, p=26, fanout=2, levels=4, frozen_below=1),
+    ),
     "sharded_qf": ("sharded_qf", dict(q=12, r=10, n_shards=1)),
+    # frozen family: capacity covers the merge test's 2N-key union
+    "xor_fuse": ("xor_fuse", dict(capacity=2600, p=26)),
+    "xor_fuse_pallas": ("xor_fuse", dict(capacity=2600, p=26, backend="pallas")),
 }
+
+# families whose façade ``insert`` raises (frozen / unsupported-k)
+FROZEN = {"xor_fuse", "xor_fuse_pallas"}
 
 N = 1024
 CHUNK = 128  # buffered structures must ingest below their RAM capacity
@@ -48,6 +58,12 @@ def _mk(case):
 
 
 def _fill(cfg, state, keys):
+    if not filters.supports(cfg, "insert"):  # frozen family: union batches
+        from repro.filters import xor_fuse
+
+        for i in range(0, keys.shape[0], CHUNK):
+            state = xor_fuse.extend(cfg, state, keys[i : i + CHUNK])
+        return state
     for i in range(0, keys.shape[0], CHUNK):
         state = filters.insert(cfg, state, keys[i : i + CHUNK])
     return state
@@ -86,6 +102,13 @@ class TestConformance:
         cfg, st = _mk(case)
         keys = _keys(5, n=CHUNK)
         name = CASES[case][0]
+        if case in FROZEN:
+            # frozen family: the façade raises the structured capability
+            # error (an UnsupportedOpError, still a NotImplementedError)
+            with pytest.raises(filters.UnsupportedOpError) as ei:
+                filters.insert(cfg, st, keys, k=CHUNK // 2)
+            assert (ei.value.family, ei.value.op) == (name, "insert")
+            return
         if name == "sharded_qf":
             with pytest.raises(NotImplementedError):
                 filters.insert(cfg, st, keys, k=CHUNK // 2)
@@ -162,7 +185,7 @@ class TestConformance:
 
     def test_stats_are_device_values(self, case):
         cfg, st = _mk(case)
-        st = filters.insert(cfg, st, _keys(9, n=CHUNK))
+        st = _fill(cfg, st, _keys(9, n=CHUNK))
         s = filters.stats(cfg, st)
         assert isinstance(s, dict) and s
         for v in s.values():

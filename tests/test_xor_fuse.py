@@ -1,0 +1,412 @@
+"""Frozen tier tests: binary-fuse core, xor_fuse family, cascade
+demotion, the 3-gather Pallas kernel, capability errors, and the
+cost-model-vs-IOCounters validation."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:  # property tests degrade to skips without hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # inert decorator stand-ins so the module imports
+        return lambda f: f
+
+    settings = given
+
+    class _Anything:
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _Anything()
+
+from repro import filters
+from repro.core import cost_model
+from repro.core import fuse_filter as fuse
+from repro.filters import xor_fuse
+from repro.filters.registry import UnsupportedOpError
+from repro.kernels import ops as kernel_ops
+
+
+def _keys(seed, n, lo=0, hi=2**31):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+FROZEN_SPEC = dict(ram_q=8, p=26, fanout=2, levels=4, frozen_below=1)
+
+
+def _fill(cfg, st, keys, chunk=128):
+    for i in range(0, keys.shape[0], chunk):
+        st = filters.insert(cfg, st, keys[i : i + chunk])
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Core: peel-construct -> probe round trips
+# ---------------------------------------------------------------------------
+
+
+class TestFuseCore:
+    @pytest.mark.parametrize("n", [1, 7, 100, 1000, 5000])
+    def test_freeze_roundtrip_no_false_negatives(self, n):
+        cfg = fuse.make_config(max(n, 1), p=26, seed=n)
+        keys = _keys(n, n)
+        st = fuse.freeze_keys(cfg, keys)
+        assert bool(fuse.contains(cfg, st, keys).all())
+        assert int(st.n) == n
+
+    def test_fp_rate_within_bound(self):
+        n = 4000
+        cfg = fuse.make_config(n, p=26, fp_bits=10)
+        st = fuse.freeze_keys(cfg, _keys(1, n))
+        absent = _keys(2, 60_000, lo=2**31, hi=2**32)
+        rate = float(fuse.contains(cfg, st, absent).mean())
+        # 2^-10 target with ~4x slack for a 60k-sample estimate
+        assert rate < 4 * 2**-cfg.fp_bits
+
+    def test_duplicate_fingerprints_peel(self):
+        # identical keys => identical hyperedges; dedup-before-peel must
+        # keep construction feasible and membership exact
+        base = _keys(3, 700)
+        keys = jnp.concatenate([base, base, base[:123]])
+        cfg = fuse.make_config(keys.shape[0], p=26)
+        st = fuse.freeze_keys(cfg, keys)
+        assert bool(fuse.contains(cfg, st, base).all())
+        assert int(st.n) == keys.shape[0]
+        assert int(st.n_unique) == 700
+
+    def test_empty_state_contains_nothing(self):
+        cfg = fuse.make_config(512, p=26)
+        st = fuse.empty(cfg)
+        assert not bool(fuse.contains(cfg, st, _keys(4, 512)).any())
+
+    def test_run_reexpansion_is_exact(self):
+        cfg = fuse.make_config(1200, p=26)
+        keys = _keys(5, 900)
+        st = fuse.freeze_keys(cfg, keys)
+        fq, fr, n = fuse.extract_run(cfg, st)
+        st2 = fuse.freeze(cfg, fq, fr, int(n))
+        assert int(st2.n) == 900
+        assert bool(fuse.contains(cfg, st2, keys).all())
+
+    def test_capacity_overflow_raises(self):
+        cfg = fuse.make_config(100, p=26)
+        with pytest.raises(ValueError, match="exceeds frozen capacity"):
+            fuse.freeze_keys(cfg, _keys(6, 101))
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="needs hypothesis")
+    @given(
+        n=st.integers(min_value=1, max_value=600),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        dup=st.integers(min_value=0, max_value=50),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_property_peel_probe_roundtrip(self, n, seed, dup):
+        rng = np.random.default_rng(seed)
+        uniq = rng.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+        keys = jnp.asarray(np.concatenate([uniq, uniq[: min(dup, n)]]))
+        cfg = fuse.make_config(keys.shape[0], p=26, seed=seed & 0xFFFF)
+        fst = fuse.freeze_keys(cfg, keys)
+        assert bool(fuse.contains(cfg, fst, keys).all())  # no false negatives
+        absent = jnp.asarray(
+            rng.integers(0, 2**32, size=4096, dtype=np.uint64).astype(np.uint32)
+        )
+        member = np.isin(np.asarray(absent), np.asarray(keys))
+        rate = float(np.asarray(fuse.contains(cfg, fst, absent))[~member].mean())
+        assert rate < max(8 * 2**-cfg.fp_bits, 0.01)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+class TestFuseKernel:
+    @pytest.mark.parametrize("nq", [16, 128, 777, 4096])
+    def test_pallas_matches_reference(self, nq):
+        cfg = fuse.make_config(3000, p=26, seed=9)
+        st = fuse.freeze_keys(cfg, _keys(7, 3000))
+        mixed = jnp.concatenate(
+            [_keys(7, 3000)[: nq // 2], _keys(8, nq - nq // 2, lo=2**31, hi=2**32)]
+        )
+        ref = fuse.contains(cfg, st, mixed)
+        pal = kernel_ops.fuse_contains(cfg, st, mixed)
+        assert bool((ref == pal).all())
+
+    def test_pallas_empty_table(self):
+        cfg = fuse.make_config(512, p=26)
+        st = fuse.empty(cfg)
+        assert not bool(kernel_ops.fuse_contains(cfg, st, _keys(9, 300)).any())
+
+    def test_ref_kernel_oracle_agrees(self):
+        # kernels/ref.py is an independent oracle: check it against core
+        from repro.kernels.ref import fuse_probe_ref
+
+        cfg = fuse.make_config(2000, p=26)
+        st = fuse.freeze_keys(cfg, _keys(10, 2000))
+        q = _keys(11, 1024, lo=0, hi=2**32)
+        fq, fr = fuse.key_fingerprints(cfg, q)
+        p0, p1, p2, fp = fuse.fuse_hash(cfg, fq, fr, st.fuse_seed)
+        got = fuse_probe_ref(st.table, p0, p1, p2, fp)
+        want = fuse.lookup_fp(cfg, st, fq, fr)
+        assert bool((got == want).all())
+
+
+# ---------------------------------------------------------------------------
+# Cascade demotion: demote -> probe -> re-expand -> merge stays exact
+# ---------------------------------------------------------------------------
+
+
+class TestFrozenCascade:
+    def test_demote_probe_reexpand_merge_membership_exact(self):
+        ka = _keys(20, 2048)
+        kb = _keys(21, 1024, lo=2**30, hi=2**31)
+        cfg, sa = filters.make("cascade", **FROZEN_SPEC)
+        sa = _fill(cfg, sa, ka)
+        # demotion actually happened: some frozen level is non-empty
+        s = filters.stats(cfg, sa)
+        counts = np.asarray(s["level_counts"])
+        assert counts[cfg.frozen_below :].sum() > 0
+        assert bool(filters.contains(cfg, sa, ka).all())
+        # re-expand + merge (host path): union of two frozen cascades
+        _, sb = filters.make("cascade", **FROZEN_SPEC)
+        sb = _fill(cfg, sb, kb)
+        merged = filters.merge(cfg, sa, sb)
+        assert bool(filters.contains(cfg, merged, ka).all())
+        assert bool(filters.contains(cfg, merged, kb).all())
+        assert not bool(filters.stats(cfg, merged)["overflow"])
+        # and the merged stream can re-freeze again via grow/resize
+        gcfg, gst = filters.grow(cfg, merged)
+        assert bool(filters.contains(gcfg, gst, ka).all())
+        rcfg, rst = filters.resize(gcfg, gst, levels=4, fanout=4)
+        assert bool(filters.contains(rcfg, rst, ka).all())
+        assert bool(filters.contains(rcfg, rst, kb).all())
+
+    def test_fp_rate_matches_qf_target(self):
+        keys = _keys(22, 2048)
+        absent = _keys(23, 16384, lo=2**31, hi=2**32)
+        cfg_f, sf = filters.make("cascade", **FROZEN_SPEC)
+        cfg_q, sq = filters.make(
+            "cascade", **{k: v for k, v in FROZEN_SPEC.items() if k != "frozen_below"}
+        )
+        sf = _fill(cfg_f, sf, keys)
+        sq = _fill(cfg_q, sq, keys)
+        rate_f = float(filters.contains(cfg_f, sf, absent).mean())
+        rate_q = float(filters.contains(cfg_q, sq, absent).mean())
+        # frozen levels are sized to be at least as selective as the QF
+        # levels they replace; both targets are ~2^-r and tiny here
+        assert rate_f <= rate_q + 3e-3
+        assert rate_f < 0.01
+
+    def test_frozen_levels_save_15_percent_bits(self):
+        """Acceptance: >= 15% smaller probe-structure bits/key on frozen
+        levels than the same levels all-QF, at the same fp-rate target."""
+        cfg, _ = filters.make("cascade", **FROZEN_SPEC)
+        qf_bytes = sum(
+            cfg.level_cfg(i).size_bytes
+            for i in range(cfg.levels)
+            if cfg.is_frozen(i)
+        )
+        fz_bytes = sum(
+            cfg.level_size_bytes(i) for i in range(cfg.levels) if cfg.is_frozen(i)
+        )
+        assert fz_bytes <= 0.85 * qf_bytes
+        # the cost model's per-level prediction agrees with the geometry
+        for i in range(cfg.frozen_below, cfg.levels):
+            lvl = cfg.level_cfg(i)
+            predicted = cost_model.fuse_bits_per_key(
+                lvl.capacity, cfg.fuse_cfg(i).fp_bits
+            )
+            actual = cfg.fuse_cfg(i).size_bytes * 8 / lvl.capacity
+            assert abs(predicted - actual) / actual < 0.02
+
+    def test_scan_ingest_unaffected_for_unfrozen_cascade(self):
+        # the device lax.switch path must not see any host branch
+        import jax
+
+        cfg, st = filters.make("cascade", ram_q=8, p=26, fanout=2, levels=3)
+
+        def step(s, ks):
+            return filters.insert(cfg, s, ks), None
+
+        batches = _keys(24, 16 * 128).reshape(16, 128)
+        jaxpr = jax.make_jaxpr(lambda s, bs: jax.lax.scan(step, s, bs)[0])(
+            st, batches
+        )
+        assert [e.primitive.name for e in jaxpr.jaxpr.eqns] == ["scan"]
+
+    def test_pallas_backend_parity(self):
+        keys = _keys(25, 2048)
+        cfg_r, sr = filters.make("cascade", **FROZEN_SPEC)
+        cfg_p, sp = filters.make("cascade", backend="pallas", **FROZEN_SPEC)
+        sr = _fill(cfg_r, sr, keys)
+        sp = _fill(cfg_p, sp, keys)
+        probe_keys = _keys(26, 4096, lo=0, hi=2**32)
+        assert bool(
+            (
+                filters.contains(cfg_r, sr, probe_keys)
+                == filters.contains(cfg_p, sp, probe_keys)
+            ).all()
+        )
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: cost-model predictions vs measured IOCounters
+# ---------------------------------------------------------------------------
+
+
+class TestCostModelValidation:
+    @pytest.mark.parametrize("frozen_below", [None, 0, 1])
+    def test_probe_reads_match_prediction(self, frozen_below):
+        spec = dict(ram_q=8, p=26, fanout=2, levels=4)
+        if frozen_below is not None:
+            spec["frozen_below"] = frozen_below
+        cfg, st = filters.make("cascade", **spec)
+        st = _fill(cfg, st, _keys(30, 2048))
+        misses = _keys(31, 1000, lo=2**31, hi=2**32)
+        # drop the handful of false positives: they short-circuit early
+        # and would under-count vs the all-miss prediction
+        fp_mask = np.asarray(filters.contains(cfg, st, misses))
+        misses = misses[jnp.asarray(~fp_mask)]
+        nq = int(misses.shape[0])
+
+        before = int(st.io.rand_page_reads)
+        st2, hit = filters.probe(cfg, st, misses)
+        assert not bool(hit.any())
+        measured = int(st2.io.rand_page_reads) - before
+
+        counts = np.asarray(filters.stats(cfg, st)["level_counts"])
+        nonempty = [int(c) > 0 for c in counts]
+        frozen = [cfg.is_frozen(i) for i in range(cfg.levels)]
+        predicted = cost_model.cascade_probe_reads(nq, nonempty, frozen)
+        assert measured == predicted
+
+    def test_recommend_frozen_below(self):
+        # demotion pays at scale: every level of a deep wide cascade
+        # clears the default 10% bar at its design point
+        assert cost_model.recommend_frozen_below(16, 30, fanout=4, levels=3) == 0
+        # no depth clears an impossible bar
+        assert (
+            cost_model.recommend_frozen_below(16, 30, min_saving=0.99) is None
+        )
+        # frozen_level_saving agrees with the concrete cascade geometry
+        cfg, _ = filters.make("cascade", **FROZEN_SPEC)
+        for i in range(cfg.frozen_below, cfg.levels):
+            lvl = cfg.level_cfg(i)
+            saving = cost_model.frozen_level_saving(
+                lvl.q, lvl.r, lvl.slack, cfg.max_load
+            )
+            actual = 1 - cfg.level_size_bytes(i) / lvl.size_bytes
+            assert abs(saving - actual) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: structured capability errors
+# ---------------------------------------------------------------------------
+
+
+class TestCapabilityErrors:
+    def test_insert_on_frozen_family_is_structured(self):
+        cfg, st = filters.make("xor_fuse", capacity=256, p=26)
+        with pytest.raises(UnsupportedOpError) as ei:
+            filters.insert(cfg, st, _keys(40, 16))
+        assert ei.value.family == "xor_fuse"
+        assert ei.value.op == "insert"
+        assert "make(keys=" in ei.value.hint
+        # and it still reads as NotImplementedError for legacy callers
+        assert isinstance(ei.value, NotImplementedError)
+
+    def test_delete_on_frozen_family_is_structured(self):
+        cfg, st = filters.make("xor_fuse", capacity=256, p=26)
+        with pytest.raises(UnsupportedOpError) as ei:
+            filters.delete(cfg, st, _keys(41, 16))
+        assert (ei.value.family, ei.value.op) == ("xor_fuse", "delete")
+
+    def test_delete_on_frozen_cascade_is_config_exact(self):
+        cfg, st = filters.make("cascade", **FROZEN_SPEC)
+        assert filters.supports("cascade", "delete")  # the family can
+        assert not filters.supports(cfg, "delete")  # this config cannot
+        with pytest.raises(UnsupportedOpError) as ei:
+            filters.delete(cfg, st, _keys(42, 16))
+        assert ei.value.op == "delete"
+
+    def test_unknown_op_name_raises_value_error(self):
+        cfg, _ = filters.make("qf", q=8, r=8)
+        with pytest.raises(ValueError, match="unknown filter op"):
+            filters.supports(cfg, "defragment")
+        with pytest.raises(ValueError, match="unknown filter op"):
+            filters.supports("qf", "inserts")  # typo'd op: no silent False
+
+    def test_auto_scale_surfaces_frozen_insert(self):
+        cfg, st = filters.make("xor_fuse", capacity=256, p=26)
+        with pytest.raises(UnsupportedOpError):
+            filters.auto_scale(cfg, st, _keys(43, 16))
+
+    def test_probe_falls_back_without_binding(self):
+        # bloom registers no probe: the façade degrades to contains
+        cfg, st = filters.make("bloom", m_bits=1 << 12, k=4)
+        st = filters.insert(cfg, st, _keys(44, 64))
+        st2, hit = filters.probe(cfg, st, _keys(44, 64))
+        assert bool(hit.all())
+
+
+# ---------------------------------------------------------------------------
+# Family-level structural ops
+# ---------------------------------------------------------------------------
+
+
+class TestXorFuseFamily:
+    def test_extend_unions_batches(self):
+        keys = _keys(50, 1000)
+        cfg, st = filters.make("xor_fuse", capacity=1200, p=26)
+        st = xor_fuse.extend(cfg, st, keys[:500])
+        st = xor_fuse.extend(cfg, st, keys[500:])
+        assert bool(filters.contains(cfg, st, keys).all())
+        assert int(filters.stats(cfg, st)["n"]) == 1000
+
+    def test_merge_capacity_guard(self):
+        cfg, sa = filters.make("xor_fuse", capacity=600, p=26, keys=_keys(51, 400))
+        _, sb = filters.make("xor_fuse", capacity=600, p=26, keys=_keys(52, 400))
+        with pytest.raises(ValueError, match="exceeds frozen capacity"):
+            filters.merge(cfg, sa, sb)
+
+    def test_grow_then_merge_fits(self):
+        cfg, sa = filters.make("xor_fuse", capacity=600, p=26, keys=_keys(51, 400))
+        _, sb = filters.make("xor_fuse", capacity=600, p=26, keys=_keys(52, 400))
+        gcfg, ga = filters.grow(cfg, sa)
+        _, gb = filters.grow(cfg, sb)
+        merged = filters.merge(gcfg, ga, gb)
+        assert bool(filters.contains(gcfg, merged, _keys(51, 400)).all())
+        assert bool(filters.contains(gcfg, merged, _keys(52, 400)).all())
+
+    def test_shrink_halves_capacity_membership_exact(self):
+        keys = _keys(54, 150)
+        cfg, st = filters.make("xor_fuse", capacity=1200, p=26, keys=keys)
+        assert bool(filters.needs_shrink(cfg, st))  # 150 < 0.4 * 600
+        cfg2, st2 = filters.shrink(cfg, st)
+        assert cfg2.capacity == 600
+        assert cfg2.fp_bits == cfg.fp_bits  # fp rate unchanged, unlike QF
+        assert bool(filters.contains(cfg2, st2, keys).all())
+        assert not bool(filters.needs_shrink(cfg2, st2))  # 150 > 0.4 * 300
+
+    def test_probe_charges_three_reads_per_query(self):
+        cfg, st = filters.make("xor_fuse", capacity=512, p=26, keys=_keys(53, 512))
+        st2, _ = filters.probe(cfg, st, _keys(53, 100))
+        assert (
+            int(st2.io.rand_page_reads)
+            == cost_model.FUSE_PROBE_READS * 100
+        )
+
+    def test_snapshot_spec_roundtrip(self):
+        cfg, _ = filters.make("xor_fuse", capacity=777, p=26, fp_bits=12)
+        cfg2, st2 = filters.make("xor_fuse", **cfg._asdict())
+        assert cfg2 == cfg
+        assert int(st2.core.n) == 0
