@@ -50,7 +50,10 @@ def _doubling_vs_rebuild(rng) -> list[Row]:
             _, out = filters.resize(cfg, st, new_q=cfg.q + 1)
             return out
 
-        t_double = time_fn(double)
+        # min-of-7: the pallas-vs-reference comparison on these rows is
+        # gated, and on CPU both backends lower to near-identical XLA —
+        # a scheduler stall in a median-of-5 reads as a fake 1.3x gap
+        t_double = time_fn(double, iters=7, agg=np.min)
 
         big_cfg, _ = filters.make("qf", q=Q0 + 1, r=P - Q0 - 1, backend=backend)
 
@@ -58,7 +61,7 @@ def _doubling_vs_rebuild(rng) -> list[Row]:
             _, empty = filters.make("qf", q=Q0 + 1, r=P - Q0 - 1, backend=backend)
             return filters.insert(big_cfg, empty, keys)
 
-        t_rebuild = time_fn(rebuild)
+        t_rebuild = time_fn(rebuild, iters=7, agg=np.min)
         tag = f"q{Q0}_{backend}"
         rows.append(
             Row(

@@ -1,0 +1,132 @@
+"""Compiled-cost roofline profile of the deployed kernel-layer ops.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.kernel_profile \
+        [--out experiments/kernel_roofline.json]
+
+For each kernel-layer op this lowers + compiles the deployed lowering
+(``dispatch.default_mode()``) and wraps the optimized module's
+``cost_analysis`` into :class:`repro.launch.roofline.Roofline` —
+FLOPs, bytes streamed, and the v5e HBM-projection time a bandwidth-
+bound TPU run would need.  The CPU wall-clock ratios in
+``bench_kernels``/``bench_cascade_probe`` say "never slower here";
+this artifact says what the same passes cost on the accelerator's
+roofline.  The perf-gate CI job uploads the JSON as the
+``kernel-roofline`` artifact next to the bench CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fuse_filter as fuse
+from repro.core import quotient_filter as qf
+from repro.kernels import dispatch, ops
+from repro.launch.roofline import kernel_roofline
+
+from .common import keys_u32
+
+OUT_PATH = os.path.join("experiments", "kernel_roofline.json")
+
+
+def profiles() -> dict:
+    rng = np.random.default_rng(17)
+    out = {}
+
+    # -- QF build + probe (the §3 streaming passes) ---------------------
+    cfg = qf.QFConfig(q=16, r=12, slack=2048)
+    n = 40_000
+    fq, fr = qf.fingerprints(cfg, keys_u32(rng, n))
+    fq_s, fr_s = qf._pad_sort(fq, fr, jnp.ones(fq.shape, bool))
+    out["qf_build_sorted"] = kernel_roofline(
+        lambda a, b: ops.build_sorted(cfg, a, b, n), fq_s, fr_s
+    )
+    st = qf.build_sorted(cfg, fq_s, fr_s, n)
+    pq, pr = qf.fingerprints(cfg, keys_u32(rng, 1 << 14))
+    out["qf_lookup"] = kernel_roofline(
+        lambda a, b: ops.lookup(cfg, st, a, b), pq, pr
+    )
+
+    # -- kernel-resident span build (the finish-path drain) -------------
+    dst = qf.QFConfig(q=17, r=11, slack=2048)
+    fqd, frd = qf._requotient(fq_s, fr_s, cfg, dst)
+    m1 = jnp.full((), -1, jnp.int32)
+    out["qf_build_span"] = kernel_roofline(
+        lambda a, b: ops.build_span(dst, qf.empty(dst), a, b, jnp.int32(n), m1, m1),
+        fqd,
+        frd,
+    )
+
+    # -- frozen-tier 3-gather probe --------------------------------------
+    fcfg = fuse.make_config(40_000, p=26, seed=3)
+    fst = fuse.freeze_keys(fcfg, keys_u32(rng, 40_000))
+    out["fuse_contains"] = kernel_roofline(
+        lambda k: ops.fuse_contains(fcfg, fst, k), keys_u32(rng, 1 << 14)
+    )
+
+    # -- fused multi-level cascade probe ---------------------------------
+    from repro import filters
+
+    ccfg, cst = filters.make(
+        "cascade", ram_q=8, p=26, fanout=2, levels=3, backend="pallas",
+        frozen_below=2,
+    )
+    ckeys = keys_u32(rng, 3000)
+    for i in range(0, 3000, 128):
+        cst = filters.insert(ccfg, cst, ckeys[i : i + 128])
+    out["cascade_probe_fused"] = kernel_roofline(
+        lambda k: filters.contains(ccfg, cst, k), keys_u32(rng, 1 << 13)
+    )
+
+    # -- blocked-Bloom bin kernels ---------------------------------------
+    bcfg, bst = filters.make(
+        "blocked_bloom", m_bits=1 << 20, k=4, block_bits=512, backend="pallas"
+    )
+    bkeys = keys_u32(rng, 1 << 15)
+    out["bloom_block_insert"] = kernel_roofline(
+        lambda k: filters.insert(bcfg, bst, k), bkeys
+    )
+    bst = filters.insert(bcfg, bst, bkeys)
+    out["bloom_block_contains"] = kernel_roofline(
+        lambda k: filters.contains(bcfg, bst, k), keys_u32(rng, 1 << 14)
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    payload = {
+        "comment": (
+            "Roofline terms (v5e constants) of the deployed kernel-layer "
+            "ops, from compiled-module cost_analysis; t_memory_s is the "
+            "HBM-streaming projection for these bandwidth-bound passes."
+        ),
+        "backend": jax.default_backend(),
+        "kernel_mode": dispatch.default_mode(),
+        "ops": {name: rl.as_dict() for name, rl in profiles().items()},
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(payload['ops'])} op profiles -> {args.out}")
+    for name, d in payload["ops"].items():
+        print(
+            f"{name:24s} flops={d['flops_per_device']:.3e} "
+            f"bytes={d['bytes_per_device']:.3e} "
+            f"t_mem={d['t_memory_s']*1e6:.1f}us bound={d['bound']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

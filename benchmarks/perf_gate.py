@@ -41,6 +41,13 @@ GATED_PREFIXES = ("resize_", "incr_", "kernelratio_")
 # no median normalizer, and they are excluded from computing it
 RATIO_PREFIXES = ("kernelratio_",)
 
+# absolute ceiling for ratio rows: the deployed kernel path may never be
+# more than 10% slower than the reference path it replaces, regardless
+# of what the committed baseline says (PR 7's "strictly faster" pledge).
+# Applies to every kernelratio_* row in the current run, including rows
+# too new to have a baseline entry.
+RATIO_MAX = 1.10
+
 
 def read_results(path: str) -> dict[str, float]:
     rows: dict[str, float] = {}
@@ -99,6 +106,17 @@ def compare(
         print(f"{k:40s} {'--':>12s} {current[k]:12.1f}      new (not gated)")
     for k in sorted(set(baseline) - set(current)):
         print(f"{k:40s} {baseline[k]:12.1f} {'--':>12s}      missing from run")
+    # absolute ratio ceiling: every kernelratio row of the RUN (baselined
+    # or not) must stay at or under RATIO_MAX
+    for k in sorted(current):
+        if k.startswith(RATIO_PREFIXES) and current[k] > RATIO_MAX:
+            if k not in failed:
+                failed.append(k)
+            print(
+                f"{k:40s} pallas/reference ratio {current[k]:.3f} exceeds "
+                f"the absolute ceiling {RATIO_MAX:.2f}  REGRESSION",
+                file=sys.stderr,
+            )
     if failed:
         print(
             f"\nperf-gate FAILED: {len(failed)} row(s) regressed beyond "

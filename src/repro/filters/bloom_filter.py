@@ -48,6 +48,7 @@ class BloomFilterConfig(NamedTuple):
     seed: int = 0
     counting: bool = False
     shrink_load: float = 0.4  # low watermark vs the folded (halved) tiling
+    backend: str = "reference"  # "pallas" routes through kernels.ops
 
     @property
     def core(self) -> bloom.BloomConfig:
@@ -63,6 +64,7 @@ class BlockedBloomConfig(NamedTuple):
     seed: int = 0
     counting: bool = False
     shrink_load: float = 0.4  # low watermark vs the folded (halved) tiling
+    backend: str = "reference"  # "pallas" routes through kernels.ops
 
     @property
     def n_blocks(self) -> int:
@@ -121,15 +123,63 @@ def _capacity(cfg) -> int:
     return max(1, int(_cells(cfg) * math.log(2) / cfg.k))
 
 
+def _check_backend(cfg) -> None:
+    if cfg.backend not in ("reference", "pallas"):
+        raise ValueError(
+            f"backend must be 'reference' or 'pallas', got {cfg.backend!r}"
+        )
+
+
+def _kernel_mode(cfg):
+    """Kernel mode for this config under the pallas backend.
+
+    The bin kernels need the blocked layout's locality (all k probes in
+    one bin); the classic Bloom filter's probes are table-wide random
+    gathers with nothing to tile, so its pallas backend pins the
+    kernel-equivalent xla lowering on every platform.
+    """
+    return None if isinstance(cfg, BlockedBloomConfig) else "xla"
+
+
+def _use_bin_kernel(cfg) -> bool:
+    """Whether insert/delete should go through the bin-count kernel.
+
+    Only when the resolved mode is a real Pallas kernel (mosaic /
+    interpret).  For a commutative scatter-accumulate the
+    kernel-equivalent XLA lowering *is* the reference scatter itself,
+    so under the xla mode the counts detour (which exists to mirror the
+    kernel's per-tile count semantics) would just materialize an extra
+    cell-sized plane for nothing."""
+    from repro.kernels import dispatch
+
+    return dispatch.is_pallas(dispatch.resolve(mode=_kernel_mode(cfg)))
+
+
 def make_impl(cfg_cls, name: str, paper_section: str):
     def make(**spec):
         cfg = cfg_cls(**spec)
+        _check_backend(cfg)
         return cfg, BloomState(
             cells=jnp.zeros((_cells(cfg),), _cell_dtype(cfg)),
             n=jnp.zeros((), jnp.int32),
         )
 
+    def _counts(cfg, keys, k):
+        """Per-cell hit counts of a masked batch via the bin kernel."""
+        from repro.kernels import ops as kernel_ops
+
+        idx = _masked(_indices(cfg, keys), k).reshape(-1)
+        return kernel_ops.bloom_counts(idx, _cells(cfg), mode=_kernel_mode(cfg))
+
     def insert(cfg, state, keys, k=None):
+        if cfg.backend == "pallas" and _use_bin_kernel(cfg):
+            counts = _counts(cfg, keys, k)
+            if cfg.counting:
+                # uint16 add wraps exactly like the reference's repeated +1
+                cells = state.cells + counts.astype(jnp.uint16)
+            else:
+                cells = jnp.maximum(state.cells, (counts > 0).astype(jnp.uint8))
+            return BloomState(cells=cells, n=state.n + _count(keys, k))
         idx = _masked(_indices(cfg, keys), k).reshape(-1)
         if cfg.counting:
             cells = state.cells.at[idx].add(jnp.uint16(1), mode="drop")
@@ -139,6 +189,10 @@ def make_impl(cfg_cls, name: str, paper_section: str):
 
     def contains(cfg, state, keys):
         idx = _indices(cfg, keys)
+        if cfg.backend == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.bloom_probe(state.cells, idx, mode=_kernel_mode(cfg))
         return jnp.all(state.cells[idx] > 0, axis=1)
 
     def delete(cfg, state, keys, k=None):
@@ -146,6 +200,11 @@ def make_impl(cfg_cls, name: str, paper_section: str):
             raise NotImplementedError(
                 f"{name}: delete requires counting=True (plain bits can't unset)"
             )
+        if cfg.backend == "pallas" and _use_bin_kernel(cfg):
+            counts = _counts(cfg, keys, k)
+            # wrapping subtract == the reference's per-copy add(0xFFFF)
+            cells = state.cells - counts.astype(jnp.uint16)
+            return BloomState(cells=cells, n=state.n - _count(keys, k))
         idx = _masked(_indices(cfg, keys), k).reshape(-1)
         cells = state.cells.at[idx].add(jnp.uint16(0xFFFF), mode="drop")  # wrapping -1
         return BloomState(cells=cells, n=state.n - _count(keys, k))

@@ -335,7 +335,37 @@ def _level_contains(cfg: CascadeConfig, state, i: int, keys):
     )
 
 
+def _fused_level_hits(cfg: CascadeConfig, state, keys):
+    """Per-structure hits from ONE fused kernel pass over the stack.
+
+    Q0 and the unfrozen levels hash and sort once and share a single
+    multi-window probe grid; frozen levels fold in via their 3-gather
+    pass (``ops.cascade_lookup``).  Returns ``(q0_hit, [hit per
+    level])`` so ``contains`` can OR and ``probe`` can keep the paper's
+    top-down read accounting without a second pass.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    qf_ix = [i for i in range(cfg.levels) if not cfg.is_frozen(i)]
+    fz_ix = [i for i in range(cfg.levels) if cfg.is_frozen(i)]
+    hits = kernel_ops.cascade_lookup(
+        (cfg.q0_cfg,) + tuple(cfg.level_cfg(i) for i in qf_ix),
+        (state.q0,) + tuple(state.levels[i] for i in qf_ix),
+        tuple(cfg.fuse_cfg(i) for i in fz_ix),
+        tuple(state.levels[i] for i in fz_ix),
+        keys,
+    )
+    per_level = dict(zip(qf_ix + fz_ix, hits[1:]))
+    return hits[0], [per_level[i] for i in range(cfg.levels)]
+
+
 def contains(cfg: CascadeConfig, state, keys):
+    if cfg.backend == "pallas":
+        q0_hit, lvl_hits = _fused_level_hits(cfg, state, keys)
+        hit = q0_hit
+        for h in lvl_hits:
+            hit = hit | h
+        return hit
     hit = jax.lax.cond(
         state.q0.n > 0,
         lambda: qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys),
@@ -350,8 +380,16 @@ def probe(cfg: CascadeConfig, state, keys):
     """Lookup with the paper's schedule: per query still unresolved at a
     non-empty disk level, one random page read (QF cluster) or
     ``cost_model.FUSE_PROBE_READS`` independent gathers (frozen level),
-    top-down short-circuit.  Matches ``cost_model.cascade_probe_reads``."""
-    hit = qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys)
+    top-down short-circuit.  Matches ``cost_model.cascade_probe_reads``.
+
+    The modeled I/O schedule stays top-down-sequential either way; under
+    the pallas backend the *device* work is the one fused pass of
+    ``_fused_level_hits`` and the schedule is re-derived from its
+    per-level hits."""
+    if cfg.backend == "pallas":
+        hit, lvl_hits = _fused_level_hits(cfg, state, keys)
+    else:
+        hit = qf_filter.contains_keys(cfg.q0_cfg, cfg.backend, state.q0, keys)
     reads = jnp.zeros((), jnp.int32)
     for i in range(cfg.levels):
         s = state.levels[i]
@@ -367,7 +405,12 @@ def probe(cfg: CascadeConfig, state, keys):
             per_query * jnp.sum(pending, dtype=jnp.int32),
             jnp.int32(0),
         )
-        hit = hit | (pending & _level_contains(cfg, state, i, keys))
+        level_hit = (
+            lvl_hits[i]
+            if cfg.backend == "pallas"
+            else _level_contains(cfg, state, i, keys)
+        )
+        hit = hit | (pending & level_hit)
     io = state.io._replace(rand_page_reads=state.io.rand_page_reads + reads)
     return state._replace(io=io), hit
 

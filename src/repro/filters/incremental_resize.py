@@ -157,35 +157,48 @@ def _advance(mcfg: MigratingQFConfig, ms: MigrationState, steps: int = 1):
 
     Pure device arithmetic with static shapes: a no-op (masked) once the
     stream is drained, so it is safe to call unconditionally per batch.
+
+    The carried probe scan closed-forms over any span length, so a
+    multi-step advance is ONE ``steps * chunk``-wide requotient + append
+    (``kops.build_span`` — a single scatter / kernel grid), bit-identical
+    to ``steps`` sequential chunk moves but without the host-composed
+    per-chunk dispatch that used to dominate ``finish``-time drains.
+    The I/O ledger still charges the *schedule* (one ``migrate_chunks``
+    tick per chunk-sized slice moved), matching the per-step path.
     """
     src, dst = mcfg.src.core, mcfg.dst.core
-    for _ in range(steps):
-        C = mcfg.chunk
-        idx = ms.cursor + jnp.arange(C, dtype=jnp.int32)
-        valid = idx < ms.src_n
-        gi = jnp.clip(idx, 0, ms.src_fq.shape[0] - 1)
-        fq = jnp.where(valid, ms.src_fq[gi], qf.INT32_MAX)
-        fr = jnp.where(valid, ms.src_fr[gi], qf.UINT32_MAX)
-        fq, fr = qf._requotient(fq, fr, src, dst)
-        moved = jnp.sum(valid, dtype=jnp.int32)
+    C = mcfg.chunk
+    span = C * steps
+    idx = ms.cursor + jnp.arange(span, dtype=jnp.int32)
+    valid = idx < ms.src_n
+    gi = jnp.clip(idx, 0, ms.src_fq.shape[0] - 1)
+    fq = jnp.where(valid, ms.src_fq[gi], qf.INT32_MAX)
+    fr = jnp.where(valid, ms.src_fr[gi], qf.UINT32_MAX)
+    fq, fr = qf._requotient(fq, fr, src, dst)
+    moved = jnp.sum(valid, dtype=jnp.int32)
+    if steps == 1:
+        # per-insert path: O(chunk) scattered writes on every backend
         new_dst, last_pos, last_fq = kops.build_chunk(
             dst, ms.dst, fq, fr, moved, ms.last_pos, ms.last_fq
         )
-        io = ms.io._replace(
-            seq_read_bytes=ms.io.seq_read_bytes
-            + moved.astype(jnp.float32) * (src.bits_per_slot / 8.0),
-            seq_write_bytes=ms.io.seq_write_bytes
-            + moved.astype(jnp.float32) * (dst.bits_per_slot / 8.0),
-            migrate_chunks=ms.io.migrate_chunks + (moved > 0).astype(jnp.int32),
+    else:
+        new_dst, last_pos, last_fq = kops.build_span(
+            dst, ms.dst, fq, fr, moved, ms.last_pos, ms.last_fq
         )
-        ms = ms._replace(
-            cursor=ms.cursor + moved,
-            dst=new_dst,
-            last_pos=last_pos,
-            last_fq=last_fq,
-            io=io,
-        )
-    return ms
+    io = ms.io._replace(
+        seq_read_bytes=ms.io.seq_read_bytes
+        + moved.astype(jnp.float32) * (src.bits_per_slot / 8.0),
+        seq_write_bytes=ms.io.seq_write_bytes
+        + moved.astype(jnp.float32) * (dst.bits_per_slot / 8.0),
+        migrate_chunks=ms.io.migrate_chunks + (moved + C - 1) // C,
+    )
+    return ms._replace(
+        cursor=ms.cursor + moved,
+        dst=new_dst,
+        last_pos=last_pos,
+        last_fq=last_fq,
+        io=io,
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
@@ -251,10 +264,11 @@ def needs_settle(mcfg: MigratingQFConfig, ms: MigrationState):
 def finish(mcfg: MigratingQFConfig, ms: MigrationState):
     """Collapse the migration into a plain ``(cfg, state)`` QF pair.
 
-    Drains any pending stream entries (bounded chunks, usually zero by
-    the time the driver calls this), then folds the side buffer in with
-    one sort-free two-stream merge — O(table) scatter work, skipping
-    the O(table log table) sort a blocking resize pays.
+    Drains any pending stream entries in ONE fused span append
+    (``kops.build_span`` — usually zero entries by the time the driver
+    calls this), then folds the side buffer in with one sort-free
+    two-stream merge — O(table) scatter work, skipping the
+    O(table log table) sort a blocking resize pays.
     """
     pending = int(ms.src_n - ms.cursor)
     if pending > 0:

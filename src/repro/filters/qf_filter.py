@@ -3,8 +3,9 @@
 Thin functional adapter over :mod:`repro.core.quotient_filter` with a
 ``backend`` spec field: ``"reference"`` uses the pure-jnp bulk ops,
 ``"pallas"`` routes the bandwidth-bound build/probe passes through the
-Pallas kernels in :mod:`repro.kernels.ops` (interpret mode on CPU,
-Mosaic on real TPUs).  Deletes always use the reference build — they
+mode-dispatched kernel layer in :mod:`repro.kernels.ops` (Mosaic on
+real TPUs, a bit-exact kernel-equivalent XLA lowering on CPU/GPU — see
+``kernels.dispatch``).  Deletes always use the reference build — they
 are off the hot path and the kernel wrapper only accelerates
 build/probe.
 """

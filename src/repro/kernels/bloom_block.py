@@ -1,0 +1,166 @@
+"""Pallas TPU kernels: blocked-Bloom bin insert + contains.
+
+The blocked Bloom filter's whole design point is that all k probes of a
+key land inside one ``block_bits``-sized bin (one cache line / flash
+page) — the layout of SNIPPETS.md's BlockBloomFilter (64-byte bins) and
+the paper's buffered Bloom variant.  That locality is exactly what the
+window-prefetch scheme rewards:
+
+* **contains** — queries sorted by bin share a 2*wblk-cell window whose
+  aligned start is scalar-prefetched per tile; each of the k probes is
+  a branch-free one-hot gather in the window, AND-reduced.  Tiles whose
+  bins outrun the window flag overflow (wrapper resolves exactly).
+* **insert** — the write side mirrors ``qf_build``: ALL k*B touched
+  cell indices are sorted, so the items landing in an S-cell output
+  tile are one contiguous range whose item-block is scalar-prefetched;
+  the kernel reduces a (2S x S) one-hot match matrix into per-cell hit
+  COUNTS.  Counts compose with any cell plane: ``cells + counts``
+  (counting), ``cells | (counts > 0)`` (plain bits), ``cells - counts``
+  (counting delete) — and because the aggregation is commutative, tiles
+  whose bins are denser than the item window simply fall back to a
+  scatter recount without affecting the rest (see ``ops.bloom_counts``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import dispatch
+
+
+def _make_probe_kernel(k: int):
+    def kernel(*refs):
+        # refs: blk, wbase, cell_a, cell_b, idx_0 .. idx_{k-1}, hit_o
+        blk_ref, wbase_ref, cell_a, cell_b = refs[:4]
+        idx_refs = refs[4 : 4 + k]
+        hit_o = refs[4 + k]
+        t = pl.program_id(0)
+
+        T = idx_refs[0].shape[1]
+        WT = 2 * cell_a.shape[1]
+        w = jnp.concatenate([cell_a[0, :], cell_b[0, :]])  # (WT,) cells
+        base = wbase_ref[t]
+        js = jax.lax.broadcasted_iota(jnp.int32, (T, WT), 1)
+
+        hit = jnp.ones((T,), jnp.bool_)
+        for j in range(k):
+            rel = idx_refs[j][0, :] - base
+            val = jnp.sum(jnp.where(js == rel[:, None], w[None, :], 0), axis=1)
+            hit = hit & (val > 0)
+        hit_o[0, :] = hit.astype(jnp.int32)
+
+    return kernel
+
+
+def bloom_probe_tiles(
+    cells: jnp.ndarray,
+    idx_sorted: jnp.ndarray,
+    *,
+    tile_t: int = 128,
+    wblk: int = 4096,
+    interpret: bool = True,
+):
+    """AND-of-k probe of bin-sorted queries. Returns (hit, ovf) int32 (B,).
+
+    ``cells`` is the int32 cell plane; ``idx_sorted`` is (B, k) cell
+    indices with rows ordered by their minimum index (bin order) and B a
+    multiple of ``tile_t``.  Tiles whose index span exceeds the 2*wblk
+    window report overflow for all their queries.
+    """
+    total = cells.shape[0]
+    B, k = idx_sorted.shape
+    assert B % tile_t == 0
+    n_tiles = B // tile_t
+
+    cells2 = dispatch.plane_blocks(cells, wblk)
+    idx3 = idx_sorted.reshape(n_tiles, tile_t, k)
+    mn = jnp.min(idx3, axis=(1, 2))
+    mx = jnp.max(idx3, axis=(1, 2))
+    blk, wbase, fits = dispatch.window_base(mn, mx, total, wblk)
+
+    win = lambda off: pl.BlockSpec((1, wblk), lambda t, blk, wbase: (blk[t] + off, 0))
+    qspec = pl.BlockSpec((1, tile_t), lambda t, blk, wbase: (t, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[win(0), win(1)] + [qspec] * k,
+        out_specs=[qspec],
+    )
+    idx_args = [
+        idx3[:, :, j].reshape(n_tiles, tile_t) for j in range(k)
+    ]
+    (hit2,) = pl.pallas_call(
+        _make_probe_kernel(k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tiles, tile_t), jnp.int32)],
+        interpret=interpret,
+    )(blk, wbase, cells2, cells2, *idx_args)
+
+    ovf2 = jnp.broadcast_to((~fits[:, None]).astype(jnp.int32), hit2.shape)
+    return hit2.reshape(B), ovf2.reshape(B)
+
+
+def _count_kernel(blk_ref, idx_a, idx_b, cnt_o):
+    t = pl.program_id(0)
+    S = cnt_o.shape[1]
+    base = t * S
+
+    w_idx = jnp.concatenate([idx_a[0, :], idx_b[0, :]])  # (2S,)
+    rel = w_idx - base  # outside [0, S) contributes nothing
+    cols = jax.lax.broadcasted_iota(jnp.int32, (2 * S, S), 1)
+    hit = rel[:, None] == cols  # (2S, S)
+    cnt_o[0, :] = jnp.sum(hit.astype(jnp.int32), axis=0)
+
+
+def bloom_count_tiles(
+    idx_flat_sorted: jnp.ndarray,
+    ncells: int,
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+):
+    """Aggregate ascending cell indices into per-cell counts, tiled.
+
+    Returns ``(counts, fits)``: counts is int32 (n_tiles * block_s,)
+    (slice to ``ncells``); ``fits`` is bool (n_tiles,), False where a
+    tile's item range exceeded its two prefetched item blocks (denser
+    than 2*block_s items — the caller recounts those tiles by scatter).
+    Sentinel indices (>= n_tiles * block_s, e.g. INT32_MAX for masked
+    keys) never land in any tile.
+    """
+    S = block_s
+    n_tiles = -(-ncells // S)
+    n = idx_flat_sorted.shape[0]
+    n_blocks = -(-n // S) + 1
+    pad = n_blocks * S - n
+    idx_p = jnp.concatenate(
+        [idx_flat_sorted, jnp.full((pad,), jnp.int32(2**31 - 1))]
+    )
+    idx2 = idx_p.reshape(n_blocks, S)
+
+    tile_base = jnp.arange(n_tiles, dtype=jnp.int32) * S
+    starts = jnp.searchsorted(idx_p, tile_base)
+    ends = jnp.searchsorted(idx_p, tile_base + S)
+    blk = jnp.minimum(starts // S, n_blocks - 2).astype(jnp.int32)
+    fits = ends <= (blk + 2) * S
+
+    win = lambda off: pl.BlockSpec((1, S), lambda t, blk: (blk[t] + off, 0))
+    out = pl.BlockSpec((1, S), lambda t, blk: (t, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[win(0), win(1)],
+        out_specs=[out],
+    )
+    (cnt2,) = pl.pallas_call(
+        _count_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tiles, S), jnp.int32)],
+        interpret=interpret,
+    )(blk, idx2, idx2)
+    return cnt2.reshape(n_tiles * S), fits

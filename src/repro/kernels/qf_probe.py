@@ -26,39 +26,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _probe_kernel(
-    blk_ref,
-    wbase_ref,
-    rem_a,
-    rem_b,
-    occ_a,
-    occ_b,
-    shf_a,
-    shf_b,
-    con_a,
-    con_b,
-    fq_ref,
-    fr_ref,
-    present_o,
-    ovf_o,
-):
-    t = pl.program_id(0)
-    T = fq_ref.shape[1]
-    WT = 2 * rem_a.shape[1]
+def window_decode(w_rem, w_occ, w_shf, w_con, fq, fr, base):
+    """Branch-free cluster decode of one query tile against one window.
 
-    w_rem = jnp.concatenate([rem_a[0, :], rem_b[0, :]])  # (WT,)
-    w_occ = jnp.concatenate([occ_a[0, :], occ_b[0, :]]) > 0
-    w_shf = jnp.concatenate([shf_a[0, :], shf_b[0, :]]) > 0
-    w_con = jnp.concatenate([con_a[0, :], con_b[0, :]]) > 0
+    ``w_*`` are the (WT,) window planes (rem int32, rest bool), ``fq`` /
+    ``fr`` the (T,) tile queries, ``base`` the window's absolute start
+    slot.  Returns ``(present, ovf)`` bool (T,) — the vectorized paper
+    Fig. 3 walk shared by the single-level and fused-cascade kernels.
+    """
+    T = fq.shape[0]
+    WT = w_rem.shape[0]
     nonempty = w_occ | w_shf
 
     # shared over the tile: run-start prefix counts
     run_start = (nonempty & ~w_con).astype(jnp.int32)
     cum = jnp.cumsum(run_start.reshape(1, WT), axis=1)[0]  # (WT,)
 
-    fq = fq_ref[0, :]
-    fr = fr_ref[0, :]
-    rel = fq - wbase_ref[t]  # (T,) in [0, WT) when tile fits
+    rel = fq - base  # (T,) in [0, WT) when tile fits
 
     js = jax.lax.broadcasted_iota(jnp.int32, (T, WT), 1)
     relc = rel[:, None]
@@ -87,7 +71,35 @@ def _probe_kernel(
     ovf_right = in_run[:, -1]
     ovf_nostart = occ_q & ~ovf_left & (cum[-1] < C)
     ovf = occ_q & (ovf_left | ovf_right | ovf_nostart)
+    return present, ovf
 
+
+def _probe_kernel(
+    blk_ref,
+    wbase_ref,
+    rem_a,
+    rem_b,
+    occ_a,
+    occ_b,
+    shf_a,
+    shf_b,
+    con_a,
+    con_b,
+    fq_ref,
+    fr_ref,
+    present_o,
+    ovf_o,
+):
+    t = pl.program_id(0)
+
+    w_rem = jnp.concatenate([rem_a[0, :], rem_b[0, :]])  # (WT,)
+    w_occ = jnp.concatenate([occ_a[0, :], occ_b[0, :]]) > 0
+    w_shf = jnp.concatenate([shf_a[0, :], shf_b[0, :]]) > 0
+    w_con = jnp.concatenate([con_a[0, :], con_b[0, :]]) > 0
+
+    present, ovf = window_decode(
+        w_rem, w_occ, w_shf, w_con, fq_ref[0, :], fr_ref[0, :], wbase_ref[t]
+    )
     present_o[0, :] = present.astype(jnp.int32)
     ovf_o[0, :] = ovf.astype(jnp.int32)
 

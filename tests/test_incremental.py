@@ -100,6 +100,63 @@ class TestMigrationInFlight:
         for a, b in zip(want, state):
             assert bool(jnp.array_equal(a, b))
 
+    def test_build_span_matches_chunked_build_at_every_cursor(self):
+        """One fused span append (the PR 7 finish-time drain) must be
+        bit-identical to the sequential chunk moves it replaces, from
+        EVERY chunk-aligned migration cursor, in both the xla lowering
+        and the interpreted Pallas kernel."""
+        cfg = qf.QFConfig(q=8, r=10, slack=128)
+        n, C = 200, 32
+        keys = _keys(50, n)
+        fq, fr = qf.fingerprints(cfg, keys)
+        fq, fr = qf._pad_sort(fq, fr, jnp.ones((n,), jnp.bool_))
+        want = qf.build_sorted(cfg, fq, fr, n)
+        for mode in ("xla", "interpret"):
+            state = qf.empty(cfg)
+            last_pos = jnp.full((), -1, jnp.int32)
+            last_fq = jnp.full((), -1, jnp.int32)
+            for cursor in range(0, n, C):
+                # one fused span drains everything past this cursor...
+                drained, _, _ = kops.build_span(
+                    cfg,
+                    state,
+                    fq[cursor:],
+                    fr[cursor:],
+                    jnp.int32(n - cursor),
+                    last_pos,
+                    last_fq,
+                    mode=mode,
+                )
+                for name, a, b in zip(want._fields, want, drained):
+                    assert bool(jnp.array_equal(a, b)), (mode, cursor, name)
+                # ...while the per-chunk path advances the cursor itself
+                state, last_pos, last_fq = kops.build_chunk(
+                    cfg,
+                    state,
+                    fq[cursor : cursor + C],
+                    fr[cursor : cursor + C],
+                    jnp.int32(min(C, n - cursor)),
+                    last_pos,
+                    last_fq,
+                )
+
+    def test_finish_multi_chunk_drain_matches_stepwise(self):
+        """finish()'s single build_span drain over many pending chunks
+        must produce the same planes as advancing chunk by chunk."""
+        cfg, st = filters.make("qf", q=9, r=15)
+        st = filters.insert(cfg, st, _keys(60, cfg.core.capacity))
+        mcfg, ms = ir.begin(cfg, st, chunk=64)
+        ms = filters.insert(mcfg, ms, _keys(61, 16, lo=2**31, hi=2**32))
+        assert not bool(ir.migration_done(mcfg, ms))  # many chunks pending
+        ms_ref = ms
+        while not bool(ir.migration_done(mcfg, ms_ref)):
+            ms_ref = ir._advance(mcfg, ms_ref)  # steps=1: chunk at a time
+        fcfg, fst = ir.finish(mcfg, ms)  # one fused span drain
+        fcfg_ref, fst_ref = ir.finish(mcfg, ms_ref)
+        assert fcfg == fcfg_ref
+        for name, a, b in zip(fst._fields, fst, fst_ref):
+            assert bool(jnp.array_equal(a, b)), name
+
     def test_io_charged_per_chunk(self):
         cfg, st = filters.make("qf", q=9, r=15)
         st = filters.insert(cfg, st, _keys(6, cfg.core.capacity))
