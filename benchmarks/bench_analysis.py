@@ -1,0 +1,54 @@
+"""Analyzer wall-time: what the CI `analysis` job costs per run.
+
+One row per analyzer (``analysis_lint`` / ``analysis_spec`` /
+``analysis_trace``) so the CSV history shows when an analyzer's cost
+drifts — e.g. a new rule making the lint quadratic, or a new registry
+family doubling the trace audit.  These rows are informational
+(``analysis_`` is not a gated prefix in ``benchmarks.perf_gate``):
+wall-time here tracks repo size by design.
+
+The timed unit is one full in-process run against the committed
+artifacts, including jaxpr tracing for the audit; a single iteration
+each (these are multi-second passes, not microbenchmarks).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from .common import Row
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run() -> list[Row]:
+    from repro.analysis.lint import load_config, run_lint
+    from repro.analysis.spec_check import run_spec_check
+    from repro.analysis.trace_audit import run_audit
+
+    rows = []
+
+    cfg = load_config(ROOT)
+    t = _timed(lambda: run_lint(ROOT, cfg))
+    res = run_lint(ROOT, cfg)
+    rows.append(
+        Row(
+            "analysis_lint",
+            t * 1e6,
+            f"files={res.n_files};scopes={res.n_scopes};ok={int(res.ok)}",
+        )
+    )
+
+    t = _timed(lambda: run_spec_check())
+    rows.append(Row("analysis_spec", t * 1e6, "kernels=6"))
+
+    t = _timed(lambda: run_audit())
+    rows.append(Row("analysis_trace", t * 1e6, "families=10"))
+    return rows

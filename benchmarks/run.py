@@ -30,6 +30,7 @@ MODULES = [
     "bench_kernels",    # deployed-mode kernels + gated pallas/ref ratios
     "bench_cascade_probe",  # fused multi-level probe vs per-level walk
     "bench_xor_fuse",   # frozen (binary-fuse) cold tier vs QF levels
+    "bench_analysis",   # static-analysis pass wall-time (CI analysis job)
 ]
 
 OUT_PATH = os.path.join("experiments", "bench_results.csv")

@@ -1,0 +1,18 @@
+"""Static analysis for the repro: trace-safety + kernel-contract checks.
+
+Three cooperating analyzers, runnable as ``python -m repro.analysis``
+(see ``__main__``) and as the CI ``analysis`` job:
+
+- :mod:`repro.analysis.lint` — **repro-lint**, an AST rule engine that
+  flags host-sync constructs inside jit-reachable code (rule classes in
+  :mod:`repro.analysis.rules`, registered like ``filters/registry.py``
+  impls), with a committed per-file allowlist ``baseline.toml``.
+- :mod:`repro.analysis.trace_audit` — traces every registry family's
+  ops via ``jax.make_jaxpr``, asserts zero callback/transfer
+  primitives, and diffs primitive counts against the committed
+  ``trace_manifest.json``.
+- :mod:`repro.analysis.spec_check` — statically validates every Pallas
+  kernel's grid/BlockSpec metadata (index maps in bounds, tiles divide
+  planes, scalar-prefetch counts match) and that each kernel has a
+  bound ``kernels/ref.py`` oracle and a parity test.
+"""

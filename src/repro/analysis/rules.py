@@ -1,0 +1,454 @@
+"""repro-lint rules: each a small class with id, severity and fix hint.
+
+Rules are registered like filter impls in ``filters/registry.py`` — a
+module-level registry that :mod:`repro.analysis.lint` iterates.  Each
+rule's :meth:`Rule.visit` walks one function scope (the AST nodes owned
+by a single ``def``, nested defs excluded) and yields
+``(lineno, message)`` violations; the engine attaches file / function /
+jit-reachability context and severity.
+
+Rule ids (stable — referenced from ``baseline.toml``):
+
+- **RL101** ``.item()`` / ``.tolist()`` host sync
+- **RL102** ``int()`` / ``float()`` / ``bool()`` on a traced value
+- **RL103** numpy host round-trip (``np.asarray`` / ``np.array`` /
+  ``jax.device_get``)
+- **RL104** Python ``if`` / ``while`` branching on a device scalar
+- **RL105** kernel-mode resolution inside jit-reachable code (the PR-7
+  stale-jit-cache bug class)
+- **RL106** bare int32-range literal compared without an explicit dtype
+  (the PR-3 sentinel-wrap bug class)
+- **RL107** state-threading ``jax.jit`` without ``donate_argnums``
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    func: str  # dotted in-file qualname; "<module>" for top-level code
+    message: str
+    severity: str  # "error" (jit-reachable) | "warning"
+    hint: str
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}: {self.rule} [{self.severity}] "
+            f"{self.message}  (in {self.func})"
+        )
+
+
+class Rule:
+    """Base rule.  Subclasses set the class attrs and implement visit."""
+
+    id: str = "RL000"
+    title: str = ""
+    hint: str = ""
+    # True: only report inside jit-reachable scopes (construct is fine on
+    # the host); False: report everywhere, severity by reachability.
+    jit_only: bool = False
+    # non-None: severity is fixed instead of derived from reachability
+    fixed_severity: Optional[str] = None
+
+    def visit(self, scope: "Scope", ctx: "FileContext") -> Iterator[tuple[int, str]]:
+        raise NotImplementedError
+
+
+RULES: list[Rule] = []
+
+
+def register(cls: type) -> type:
+    RULES.append(cls())
+    return cls
+
+
+def rule_by_id(rule_id: str) -> Rule:
+    for r in RULES:
+        if r.id == rule_id:
+            return r
+    raise KeyError(f"unknown rule {rule_id!r}; known: {[r.id for r in RULES]}")
+
+
+# --------------------------------------------------------------------------
+# shared AST helpers
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost Name of an arbitrary expression chain (calls/subscripts ok)."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, (ast.Subscript, ast.Call)):
+            node = node.func if isinstance(node, ast.Call) else node.value
+        elif isinstance(node, ast.Name):
+            return node.id
+        else:
+            return None
+
+
+_SENTINELS = {2147483647, 2147483648, -2147483648, 4294967295}
+
+_DTYPE_WRAPPERS = {
+    "int32",
+    "uint32",
+    "int64",
+    "uint64",
+    "asarray",
+    "array",
+    "full",
+    "full_like",
+    "astype",
+    "constant",
+}
+
+# cfg-ish roots whose attributes are static python scalars by protocol
+# (configs are hashable NamedTuples — jit-static by construction)
+_STATIC_ROOT_SUFFIXES = ("cfg", "spec", "math")
+
+_HOST_CAST_SAFE_CALLS = {"len", "round", "abs", "min", "max", "ord", "pow", "sum"}
+
+
+def _is_static_expr(node: ast.AST, ctx: "FileContext") -> bool:
+    """Conservatively: does this expression never hold a traced value?"""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        final_static = node.attr in {"shape", "ndim", "size", "dtype"}
+        root = root_name(node)
+        root_static = root is not None and (
+            root.endswith(_STATIC_ROOT_SUFFIXES) or root in ctx.static_roots
+        )
+        return final_static or root_static
+    if isinstance(node, ast.Name):
+        return node.id in ctx.static_roots or node.id.endswith(_STATIC_ROOT_SUFFIXES)
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value, ctx)
+    if isinstance(node, ast.Call):
+        fn = dotted_name(node.func)
+        if fn is None:
+            return False
+        base = fn.split(".")[0]
+        if fn in _HOST_CAST_SAFE_CALLS or base == "math":
+            if fn == "len":
+                return True  # len() of anything is a host int
+            return all(_is_static_expr(a, ctx) for a in node.args)
+        if base.endswith(_STATIC_ROOT_SUFFIXES) or base in ctx.static_roots:
+            # method on a static config (cfg.slots(), spec.total_bits())
+            return all(_is_static_expr(a, ctx) for a in node.args)
+        if "." not in fn and node.args:
+            # local helper on static-only args (geometry math like
+            # _cells(cfg)); device values enter through state/keys args
+            return all(_is_static_expr(a, ctx) for a in node.args)
+        return False
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left, ctx) and _is_static_expr(node.right, ctx)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand, ctx)
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static_expr(v, ctx) for v in node.values)
+    if isinstance(node, ast.Compare):
+        return _is_static_expr(node.left, ctx) and all(
+            _is_static_expr(c, ctx) for c in node.comparators
+        )
+    if isinstance(node, ast.IfExp):
+        return (
+            _is_static_expr(node.test, ctx)
+            and _is_static_expr(node.body, ctx)
+            and _is_static_expr(node.orelse, ctx)
+        )
+    return False
+
+
+def _is_literal_arith(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float))
+    if isinstance(node, ast.BinOp):
+        return _is_literal_arith(node.left) and _is_literal_arith(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_literal_arith(node.operand)
+    return False
+
+
+def _contains_sentinel_literal(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and sub.value in _SENTINELS:
+            return True
+        if isinstance(sub, ast.BinOp):
+            lo, hi = sub.left, sub.right
+            if (
+                isinstance(sub.op, (ast.Pow, ast.LShift))
+                and isinstance(lo, ast.Constant)
+                and isinstance(hi, ast.Constant)
+                and lo.value in (1, 2)
+                and hi.value in (31, 32)
+            ):
+                return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# rules
+
+
+@register
+class HostItemCall(Rule):
+    id = "RL101"
+    title = "device-to-host .item()/.tolist() sync"
+    hint = (
+        "keep the value on device (jnp ops compose under jit); if a host "
+        "scalar is genuinely needed, move the sync to the host driver and "
+        "baseline it with a reason"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("item", "tolist")
+                and not node.args
+                and not node.keywords
+            ):
+                yield node.lineno, f".{node.func.attr}() forces a host sync"
+
+
+@register
+class HostScalarCast(Rule):
+    id = "RL102"
+    title = "int()/float()/bool() on a traced value"
+    hint = (
+        "use jnp casts / lax.cond / jnp.where on device; under jit this "
+        "either fails to trace or silently freezes a traced value"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("int", "float", "bool")
+                and len(node.args) == 1
+                and not node.keywords
+                and not _is_static_expr(node.args[0], ctx)
+            ):
+                yield (
+                    node.lineno,
+                    f"{node.func.id}() on a potentially traced value forces "
+                    "a host sync",
+                )
+
+
+@register
+class NumpyHostRoundTrip(Rule):
+    id = "RL103"
+    title = "numpy host round-trip"
+    hint = (
+        "np.asarray/np.array/jax.device_get pull the buffer to host RAM; "
+        "stay in jnp, or baseline genuinely host-side code with a reason"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            if fn is None:
+                continue
+            base, _, attr = fn.rpartition(".")
+            if base in ctx.np_aliases and attr in ("asarray", "array"):
+                yield node.lineno, f"{fn}() copies the device buffer to host"
+            elif base in ctx.jax_aliases and attr == "device_get":
+                yield node.lineno, f"{fn}() copies the device buffer to host"
+
+
+@register
+class PythonBranchOnDevice(Rule):
+    id = "RL104"
+    title = "Python if/while on a device scalar"
+    jit_only = True
+    hint = (
+        "a Python branch on a traced value raises TracerBoolConversionError "
+        "under jit; use lax.cond / lax.while_loop / jnp.where"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            test = node.test
+            # int()/bool() casts in the test are RL102's finding
+            if any(
+                isinstance(s, ast.Call)
+                and isinstance(s.func, ast.Name)
+                and s.func.id in ("int", "float", "bool")
+                for s in ast.walk(test)
+            ):
+                continue
+            devicey = False
+            for s in ast.walk(test):
+                if isinstance(s, ast.Call):
+                    fn = dotted_name(s.func)
+                    if fn and fn.split(".")[0] in ctx.jnp_aliases:
+                        devicey = True
+                if isinstance(s, ast.Attribute) and root_name(s) in ctx.state_roots:
+                    devicey = True
+            if devicey:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                yield node.lineno, f"Python `{kw}` on a device value"
+
+
+@register
+class KernelModeResolveInTrace(Rule):
+    id = "RL105"
+    title = "kernel-mode resolution inside jit-reachable code"
+    jit_only = True
+    hint = (
+        "resolve the mode eagerly outside jit (kernels/dispatch.resolve in "
+        "the un-jitted wrapper) and pass it as a static arg — resolving "
+        "inside a traced region bakes the boot-time env into the jit cache "
+        "(the PR-7 bug class)"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn is None:
+                    continue
+                base, _, attr = fn.rpartition(".")
+                if attr in ("resolve", "default_mode") and (
+                    base in ctx.dispatch_aliases
+                    or (not base and fn in ctx.dispatch_funcs)
+                ):
+                    yield (
+                        node.lineno,
+                        f"{fn}() resolves kernel mode inside jit-reachable code",
+                    )
+            elif isinstance(node, ast.Constant) and node.value == "REPRO_KERNEL_MODE":
+                yield (
+                    node.lineno,
+                    "REPRO_KERNEL_MODE read inside jit-reachable code",
+                )
+
+
+@register
+class BareInt32Sentinel(Rule):
+    id = "RL106"
+    title = "bare int32-range literal in a comparison"
+    hint = (
+        "wrap sentinels in an explicit dtype (jnp.int32(2**31 - 1)) or use "
+        "the module constant (qf.INT32_MAX); a bare literal promotes per "
+        "numpy rules and can flip sign on the int32 fingerprint planes"
+    )
+
+    def visit(self, scope, ctx):
+        for node in scope.nodes:
+            if not isinstance(node, ast.Compare):
+                continue
+            for side in [node.left, *node.comparators]:
+                if not _is_literal_arith(side):
+                    continue
+                if _contains_sentinel_literal(side):
+                    yield (
+                        side.lineno,
+                        "int32-range literal compared without an explicit "
+                        "dtype wrap",
+                    )
+
+
+@register
+class JitMissingDonate(Rule):
+    id = "RL107"
+    title = "state-threading jax.jit without donate_argnums"
+    fixed_severity = "warning"
+    hint = (
+        "a jit that rebuilds its state pytree should donate the input "
+        "buffers (donate_argnums=/donate_argnames=) so the old planes are "
+        "reused instead of copied — unless callers must keep snapshots"
+    )
+
+    _DONATE_KWS = ("donate_argnums", "donate_argnames")
+
+    def _jit_call_kwargs(self, node: ast.AST, ctx) -> Optional[list[ast.keyword]]:
+        """keywords of a jit-constructing decorator/call, else None."""
+        if not isinstance(node, ast.Call):
+            fn = dotted_name(node)
+            if fn is not None and self._is_jit_name(fn, ctx):
+                return []  # bare @jax.jit — no kwargs at all
+            return None
+        fn = dotted_name(node.func)
+        if fn is None:
+            return None
+        if self._is_jit_name(fn, ctx):
+            return node.keywords
+        # functools.partial(jax.jit, static_argnums=...)
+        if fn.rpartition(".")[2] == "partial" and node.args:
+            inner = dotted_name(node.args[0])
+            if inner is not None and self._is_jit_name(inner, ctx):
+                return node.keywords
+        return None
+
+    @staticmethod
+    def _is_jit_name(fn: str, ctx) -> bool:
+        base, _, attr = fn.rpartition(".")
+        return (attr == "jit" and base in ctx.jax_aliases) or (
+            not base and fn in ctx.jax_jit_names
+        )
+
+    @staticmethod
+    def _threads_state(fndef: ast.FunctionDef) -> bool:
+        state_params = {
+            a.arg
+            for a in [*fndef.args.posonlyargs, *fndef.args.args, *fndef.args.kwonlyargs]
+            if a.arg == "state" or a.arg.endswith(("_state", "states"))
+        }
+        if not state_params:
+            return False
+        for node in ast.walk(fndef):
+            # writes: state._replace(...), state.field.at[...], or a
+            # *State(...) constructor — reads alone need no donation
+            if isinstance(node, ast.Attribute):
+                if node.attr in ("_replace", "at") and root_name(node) in state_params:
+                    return True
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn is not None and fn.rpartition(".")[2].endswith("State"):
+                    return True
+        return False
+
+    def visit(self, scope, ctx):
+        node = scope.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        for dec in node.decorator_list:
+            kws = self._jit_call_kwargs(dec, ctx)
+            if kws is None:
+                continue
+            if any(kw.arg in self._DONATE_KWS for kw in kws):
+                return
+            if self._threads_state(node):
+                yield (
+                    dec.lineno,
+                    f"jit of {node.name}() rebuilds its state without "
+                    "donate_argnums",
+                )
+            return

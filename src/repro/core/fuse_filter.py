@@ -38,9 +38,11 @@ key sets, all hash identically.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import cost_model
@@ -326,17 +328,20 @@ def freeze_keys(cfg: FuseConfig, keys: jnp.ndarray) -> FuseState:
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.jit, static_argnums=0)
 def lookup_fp(cfg: FuseConfig, state: FuseState, fq, fr):
     """MAY-CONTAIN for canonical-split fingerprints: 3 gathers + xor.
 
-    Jittable; no false negatives by construction (every member edge's
-    xor equation holds exactly).
+    Jitted with the config static (the quotient_filter idiom): an eager
+    façade ``contains`` compiles once per (cfg, batch shape) instead of
+    dispatching the whole hash + 3-gather chain op by op per call.
     """
     p0, p1, p2, fp = fuse_hash(cfg, fq, fr, state.fuse_seed)
     got = state.table[p0] ^ state.table[p1] ^ state.table[p2]
     return (state.n > 0) & (got == fp)
 
 
+@functools.partial(jax.jit, static_argnums=0)
 def contains(cfg: FuseConfig, state: FuseState, keys: jnp.ndarray):
     fq, fr = key_fingerprints(cfg, keys)
     return lookup_fp(cfg, state, fq, fr)

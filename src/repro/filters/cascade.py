@@ -206,16 +206,29 @@ def _level_write_bytes(cfg: CascadeConfig, i: int) -> float:
     )
 
 
-def _collapse_host(cfg: CascadeConfig, state: CascadeState) -> CascadeState:
+def _collapse_host(cfg: CascadeConfig, state: CascadeState, full) -> CascadeState:
     """Host-driven merge-down for frozen cascades (peeling is
     data-dependent, so the device ``lax.switch`` path cannot demote).
     Same collapse rule as ``_maybe_collapse``; returns the state
-    unchanged when no level fits."""
-    counts = [int(s.n) for s in state.levels]
-    cum = int(state.q0.n)
+    unchanged when Q0 is under the watermark or no level fits.
+
+    Everything the host decision needs — the collapse trigger, the
+    per-level counts, and the overflow flags — comes down in *one*
+    batched ``device_get`` instead of 2L+3 scalar syncs."""
+    full, q0n, counts, ovf = jax.device_get(
+        (
+            full,
+            state.q0.n,
+            jnp.stack([s.n for s in state.levels]),
+            jnp.stack([state.q0.overflow] + [s.overflow for s in state.levels]),
+        )
+    )
+    if not full:
+        return state
+    cum = q0n
     target = None
     for i in range(cfg.levels):
-        cum += counts[i]
+        cum = cum + counts[i]
         if cum <= cfg.level_cfg(i).capacity:
             target = i
             break
@@ -223,11 +236,10 @@ def _collapse_host(cfg: CascadeConfig, state: CascadeState) -> CascadeState:
         return state  # Q0 absorbs into its slack; overflow flags the rest
 
     parts = [_q0_stream(cfg, state)]
-    overflow = bool(state.q0.overflow)
+    overflow = ovf[: target + 2].any()  # q0 | levels[0..target]
     read = 0.0
     for j in range(target + 1):
         parts.append(_level_stream(cfg, state, j))
-        overflow = overflow or bool(state.levels[j].overflow)
         if counts[j] > 0:
             read += _level_read_bytes(cfg, j)
     allq, allr = qf._pad_sort(
@@ -305,11 +317,10 @@ def insert(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
     full = qf.load(cfg.q0_cfg, q0) >= cfg.max_load
     if cfg.frozen_below is None:
         return _maybe_collapse(cfg, state, full)
-    # frozen mode: the merge-down peels, which is host work — one sync
-    # at the collapse decision instead of the zero-sync lax.switch path
-    if bool(full):
-        state = _collapse_host(cfg, state)
-    return state
+    # frozen mode: the merge-down peels, which is host work — one
+    # *batched* sync (trigger + counts + overflow together) at the
+    # collapse decision instead of the zero-sync lax.switch path
+    return _collapse_host(cfg, state, full)
 
 
 def _structures(cfg, state):
@@ -554,7 +565,7 @@ def _restream_host(new_cfg: CascadeConfig, parts, io, overflow):
     ``new_cfg`` (host-level; the shared tail of frozen merge/resize).
     ``parts`` is a list of ``(fq, fr, n)`` canonical streams."""
     L = new_cfg.levels
-    total = sum(int(p[2]) for p in parts)
+    total = jax.device_get(sum(p[2] for p in parts))  # one batched sync
     target = next(
         (i for i in range(L) if total <= new_cfg.level_cfg(i).capacity), L - 1
     )
@@ -583,13 +594,18 @@ def _restream_host(new_cfg: CascadeConfig, parts, io, overflow):
 def _all_streams(cfg: CascadeConfig, state: CascadeState):
     """Every component of one cascade as canonical streams, plus the
     merge-path read bytes and the or'd overflow flag (host values)."""
+    ns, ovf = jax.device_get(
+        (
+            jnp.stack([s.n for s in state.levels]),
+            jnp.stack([state.q0.overflow] + [s.overflow for s in state.levels]),
+        )
+    )  # one batched sync for the whole walk, not 2L+1 scalar pulls
     parts = [_q0_stream(cfg, state)]
-    overflow = bool(state.q0.overflow)
+    overflow = ovf.any()
     read = 0.0
     for j in range(cfg.levels):
         parts.append(_level_stream(cfg, state, j))
-        overflow = overflow or bool(state.levels[j].overflow)
-        if int(state.levels[j].n) > 0:
+        if ns[j] > 0:
             read += _level_read_bytes(cfg, j)
     return parts, read, overflow
 

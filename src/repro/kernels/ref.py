@@ -89,3 +89,36 @@ def fuse_probe_ref(table, p0, p1, p2, fp):
     owns the empty-table (n == 0) guard.
     """
     return (table[p0] ^ table[p1] ^ table[p2]) == fp
+
+
+def bloom_probe_ref(cells, idx):
+    """Blocked-Bloom membership oracle: AND of k direct gathers.
+
+    cells: int32 (ncells,) cell plane; idx: int32 (B, k) cell indices.
+    Returns present bool (B,).
+    """
+    return jnp.all(cells[idx] > 0, axis=1)
+
+
+def bloom_count_ref(idx_flat, ncells: int):
+    """Per-cell increment counts from flat cell indices.
+
+    Sentinel / out-of-range indices (e.g. INT32_MAX for masked keys)
+    contribute nothing.  Returns int32 (ncells,).
+    """
+    return jnp.zeros((ncells,), jnp.int32).at[idx_flat].add(1, mode="drop")
+
+
+def cascade_probe_ref(level_planes, fq_levels, fr_levels, window: int):
+    """Multi-level cascade probe oracle: per-level windowed decode
+    composed into (hit, ovf) int32 bitmasks (bit l = level l), matching
+    the fused kernel's output contract.
+    """
+    B = fq_levels[0].shape[0]
+    hit = jnp.zeros((B,), jnp.int32)
+    ovf = jnp.zeros((B,), jnp.int32)
+    for lvl, (rem, occ, shf, con) in enumerate(level_planes):
+        p, o = probe_ref(rem, occ, shf, con, fq_levels[lvl], fr_levels[lvl], window)
+        hit = hit | (p.astype(jnp.int32) << lvl)
+        ovf = ovf | (o.astype(jnp.int32) << lvl)
+    return hit, ovf

@@ -89,13 +89,16 @@ class PrefixCacheFilter:
     def check_and_insert(self, prompts: np.ndarray) -> np.ndarray:
         """Membership for each prompt; then insert the misses."""
         keys = self._digest(prompts)
-        hit = np.array(filters.contains(self.cfg, self.state, keys))
-        # intra-batch duplicates: mark later copies as hits
-        seen: dict[int, int] = {}
-        for i, k in enumerate(np.asarray(keys)):
-            if int(k) in seen:
-                hit[i] = True
-            seen[int(k)] = i
+        hit = filters.contains(self.cfg, self.state, keys)
+        # intra-batch duplicates: mark later copies as hits, device-side
+        # (stable sort + adjacent-equal, scattered back through the
+        # permutation) — the filter probe and the dup pass fuse into one
+        # program instead of a per-key host loop syncing per digest
+        order = jnp.argsort(keys)  # jax sorts are stable: first copy wins
+        sk = keys[order]
+        dup_sorted = jnp.zeros(keys.shape, bool).at[1:].set(sk[1:] == sk[:-1])
+        hit = hit | jnp.zeros(keys.shape, bool).at[order].set(dup_sorted)
+        hit = np.asarray(hit)  # single batched transfer: the caller's mask
         misses = keys[jnp.asarray(~hit)]
         if misses.shape[0]:
             if self.auto_scale:
