@@ -36,6 +36,28 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, agg=np.median, **kw) -> 
     return float(agg(ts))
 
 
+def time_pair(fa, fb, *, warmup: int = 2, iters: int = 30) -> tuple[float, float]:
+    """Paired minima for a gated *ratio* row: (min seconds fa, min seconds fb).
+
+    The two closures are timed interleaved in ONE loop, so both minima
+    sample the same machine-condition window.  Timing them in separate
+    ``time_fn`` passes lets a frequency/scheduler shift between the
+    passes move the quotient by ~20% even when the computations are
+    identical — enough to flake an absolute-ceiling gate."""
+    for _ in range(warmup):
+        jax.block_until_ready(fa())
+        jax.block_until_ready(fb())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb())
+        tb.append(time.perf_counter() - t0)
+    return float(np.min(ta)), float(np.min(tb))
+
+
 def keys_u32(rng, n, lo=0, hi=2**32):
     import jax.numpy as jnp
 

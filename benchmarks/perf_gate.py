@@ -34,19 +34,48 @@ BASELINE_PATH = os.path.join("experiments", "bench_baseline.json")
 RESULTS_PATH = os.path.join("experiments", "bench_results.csv")
 
 # rows the gate watches; keep in sync with the perf-gate CI job's --only
-GATED_PREFIXES = ("resize_", "incr_", "kernelratio_")
+GATED_PREFIXES = ("resize_", "incr_", "kernelratio_", "p99ratio_")
 
-# rows whose value is already a pallas/reference *ratio*: machine speed
-# cancels in the quotient, so these compare to baseline directly —
-# no median normalizer, and they are excluded from computing it
-RATIO_PREFIXES = ("kernelratio_",)
+# rows whose value is already a *ratio* of two timings from the same
+# run: machine speed cancels in the quotient, so these compare to
+# baseline directly — no median normalizer, and they are excluded from
+# computing it
+RATIO_PREFIXES = ("kernelratio_", "p99ratio_")
 
-# absolute ceiling for ratio rows: the deployed kernel path may never be
-# more than 10% slower than the reference path it replaces, regardless
-# of what the committed baseline says (PR 7's "strictly faster" pledge).
-# Applies to every kernelratio_* row in the current run, including rows
-# too new to have a baseline entry.
-RATIO_MAX = 1.10
+# absolute ceilings for ratio rows, applied to every matching row of
+# the current run — including rows too new to have a baseline entry:
+#
+# * ``kernelratio_*`` (pallas/reference): the deployed kernel path may
+#   never be more than 10% slower than the reference path it replaces
+#   (PR 7's "strictly faster" pledge).
+# * ``p99ratio_*_insert`` (family p99 / flat in-place p99, from
+#   ``bench_steady_state``): the steady-state tail pledge.  The steady
+#   ceiling 0.20 is this family's acceptance bar — p99 at least 5x
+#   below the in-place path; the rest sit ~2-3x above their measured
+#   values (0.05-0.10) so scheduler noise cannot flake the job while a
+#   real stop-the-world regression still trips it.  Unlisted p99ratio
+#   rows get the catch-all: any buffered family's tail must stay below
+#   half the in-place baseline.
+RATIO_CEILINGS = {
+    "kernelratio_": 1.10,
+    "p99ratio_steady_insert": 0.20,
+    "p99ratio_buffered_insert": 0.15,
+    "p99ratio_cascade_insert": 0.25,
+    "p99ratio_cascade_frozen_insert": 0.15,
+    "p99ratio_": 0.50,
+}
+
+
+def ratio_ceiling(name: str) -> float | None:
+    """Absolute ceiling for a ratio row: exact name first, then the
+    longest matching prefix; None for rows gated only vs baseline."""
+    if name in RATIO_CEILINGS:
+        return RATIO_CEILINGS[name]
+    best = None
+    for prefix, ceiling in RATIO_CEILINGS.items():
+        if name.startswith(prefix) and (best is None or len(prefix) > best[0]):
+            best = (len(prefix), ceiling)
+    return best[1] if best else None
 
 
 def read_results(path: str) -> dict[str, float]:
@@ -106,15 +135,16 @@ def compare(
         print(f"{k:40s} {'--':>12s} {current[k]:12.1f}      new (not gated)")
     for k in sorted(set(baseline) - set(current)):
         print(f"{k:40s} {baseline[k]:12.1f} {'--':>12s}      missing from run")
-    # absolute ratio ceiling: every kernelratio row of the RUN (baselined
-    # or not) must stay at or under RATIO_MAX
+    # absolute ratio ceilings: every ratio row of the RUN (baselined or
+    # not) must stay at or under its ceiling
     for k in sorted(current):
-        if k.startswith(RATIO_PREFIXES) and current[k] > RATIO_MAX:
+        ceiling = ratio_ceiling(k) if k.startswith(RATIO_PREFIXES) else None
+        if ceiling is not None and current[k] > ceiling:
             if k not in failed:
                 failed.append(k)
             print(
-                f"{k:40s} pallas/reference ratio {current[k]:.3f} exceeds "
-                f"the absolute ceiling {RATIO_MAX:.2f}  REGRESSION",
+                f"{k:40s} ratio {current[k]:.3f} exceeds the absolute "
+                f"ceiling {ceiling:.2f}  REGRESSION",
                 file=sys.stderr,
             )
     if failed:

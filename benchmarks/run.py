@@ -27,6 +27,7 @@ MODULES = [
     "bench_fanout",     # Fig 9 / §5.3
     "bench_resize",     # §3 resizing: doubling vs rebuild + growth schedules
     "bench_incremental",  # blocking vs amortized growth (the headline curve)
+    "bench_steady_state",  # steady-state insert tail under mixed traffic
     "bench_kernels",    # deployed-mode kernels + gated pallas/ref ratios
     "bench_cascade_probe",  # fused multi-level probe vs per-level walk
     "bench_xor_fuse",   # frozen (binary-fuse) cold tier vs QF levels

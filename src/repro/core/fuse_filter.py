@@ -9,18 +9,26 @@ write-once between merge-downs — exactly the immutability this layout
 needs — so the cascade's ``frozen_below`` mode (``repro.filters.cascade``)
 demotes merged-down levels into this form.
 
-Construction is peeling-based and split across the hierarchy the way
-the paper splits its own maintenance work:
+Construction is peeling-based and fully device-resident
+(:func:`freeze_stream` is traceable; the data-dependent round count
+lives in ``lax.while_loop`` carries, not host control flow):
 
-* **host-side peel ordering** — the 3-uniform hypergraph over the
-  deduplicated fingerprints is peeled in *parallel rounds* (all keys
-  incident to a degree-1 cell per round; O(log n) rounds whp), a
-  data-dependent loop that cannot live under ``jit``;
-* **device-side batched assignment** — each round is then one gather +
-  xor + scatter batch over the table, replayed in reverse round order.
+* **parallel-round peel** — the 3-uniform hypergraph over the
+  deduplicated fingerprints is peeled in rounds (all keys incident to a
+  degree-1 cell per round; O(log n) rounds whp), recording each key's
+  peel round and assigned cell;
+* **reverse-round replay** — each round is then one gather + xor +
+  masked scatter batch over the table, replayed in reverse round order.
   Within a round, assigned cells are provably disjoint from the cells
   any same-round key reads (a degree-1 cell is incident to exactly one
   alive key), so the batch is exact.
+
+Seed retries on a 2-core ride in an outer ``while_loop``; a set that
+still will not peel after :data:`MAX_PEEL_ATTEMPTS` seeds sets the
+state's ``overflow`` flag (the protocol's poisoned-but-correct-shape
+convention) instead of raising, so frozen construction can run under
+``jit`` from the cascade's merge-down path.  Host entry points
+(``freeze``/``freeze_keys``) still raise on concrete capacity overflow.
 
 Because an AMQ cannot re-enumerate its members, a frozen level also
 retains its sorted fingerprint *run* (the stream a merge would read) so
@@ -39,9 +47,9 @@ key sets, all hash identically.
 from __future__ import annotations
 
 import functools
+import operator
 from typing import NamedTuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -213,114 +221,177 @@ def key_fingerprints(cfg: FuseConfig, keys: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
-# Construction: host-side parallel peel + device-side batched assignment
+# Construction: device-resident parallel peel + reverse-round replay
 # ---------------------------------------------------------------------------
 
 
-def _peel_rounds(h0, h1, h2, slots: int):
-    """Parallel peeling of the 3-uniform hypergraph (host, numpy).
+def _fit_plane(x, cap: int, fill, dtype) -> jnp.ndarray:
+    """Slice/pad a stream plane to exactly ``cap`` lanes (static shapes)."""
+    x = jnp.asarray(x).astype(dtype)[:cap]
+    pad = cap - x.shape[0]
+    if pad > 0:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, dtype)])
+    return x
 
-    Returns a list of (key_indices, assigned_cell) rounds in peel order,
-    or None when the graph has a 2-core (caller retries with a new seed).
-    Each round removes every key incident to a degree-1 cell; random
-    hypergraphs below the peeling threshold drain in O(log n) rounds.
+
+def _peel_assign(cfg: FuseConfig, alive0, p0, p1, p2, fp):
+    """Peel one seed's hypergraph and replay the table assignment.
+
+    Everything is masked, fixed-shape device work: the peel
+    ``while_loop`` records (round, cell) per key; the replay
+    ``fori_loop`` walks rounds in reverse, and within a round the
+    scatter targets are provably disjoint from the cells any same-round
+    key reads (a degree-1 cell is incident to exactly one alive key).
+    Returns ``(ok, table)`` — ``ok`` False means this seed has a 2-core.
     """
-    nu = h0.shape[0]
-    deg = np.zeros(slots, np.int64)
-    for h in (h0, h1, h2):
-        np.add.at(deg, h, 1)
-    alive = np.ones(nu, bool)
-    rounds = []
-    remaining = nu
-    while remaining:
+    cap = alive0.shape[0]
+    drop = jnp.int32(cfg.slots)  # OOB index: mode="drop" discards the lane
+
+    deg = jnp.zeros((cfg.slots,), jnp.int32)
+    for p in (p0, p1, p2):
+        deg = deg.at[jnp.where(alive0, p, drop)].add(1, mode="drop")
+
+    def _peel_cond(carry):
+        _, alive, _, _, _, progressed = carry
+        return jnp.any(alive) & progressed
+
+    def _peel_body(carry):
+        deg, alive, round_of, cell_of, rnd, _ = carry
         single = deg == 1
-        can = alive & (single[h0] | single[h1] | single[h2])
-        idx = np.nonzero(can)[0]
-        if idx.size == 0:
-            return None  # 2-core: this seed cannot peel
-        s0, s1, s2 = h0[idx], h1[idx], h2[idx]
-        cell = np.where(single[s0], s0, np.where(single[s1], s1, s2))
-        rounds.append((idx, cell))
-        alive[idx] = False
-        remaining -= idx.size
-        for h in (s0, s1, s2):
-            np.add.at(deg, h, -1)
-    return rounds
+        can = alive & (single[p0] | single[p1] | single[p2])
+        cell = jnp.where(single[p0], p0, jnp.where(single[p1], p1, p2))
+        round_of = jnp.where(can, rnd, round_of)
+        cell_of = jnp.where(can, cell, cell_of)
+        for p in (p0, p1, p2):
+            deg = deg.at[jnp.where(can, p, drop)].add(-1, mode="drop")
+        return deg, alive & ~can, round_of, cell_of, rnd + 1, jnp.any(can)
+
+    deg, alive, round_of, cell_of, rounds, _ = jax.lax.while_loop(
+        _peel_cond,
+        _peel_body,
+        (
+            deg,
+            alive0,
+            jnp.full((cap,), -1, jnp.int32),
+            jnp.full((cap,), drop, jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.ones((), jnp.bool_),
+        ),
+    )
+    ok = ~jnp.any(alive)
+
+    def _replay(i, table):
+        m = round_of == rounds - 1 - i
+        v = fp ^ table[p0] ^ table[p1] ^ table[p2]
+        return table.at[jnp.where(m, cell_of, drop)].set(v, mode="drop")
+
+    table = jax.lax.fori_loop(
+        0, rounds, _replay, jnp.zeros((cfg.slots,), jnp.uint32)
+    )
+    return ok, jnp.where(ok, table, jnp.zeros_like(table))
 
 
-def freeze(cfg: FuseConfig, fq, fr, n, max_attempts: int = MAX_PEEL_ATTEMPTS):
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _freeze_impl(cfg: FuseConfig, nq, nr, n, max_attempts: int):
+    lane = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    overflow = n > cfg.capacity
+    n = jnp.minimum(n.astype(jnp.int32), jnp.int32(cfg.capacity))
+    valid = lane < n
+    nq = jnp.where(valid, nq, INT32_MAX)
+    nr = jnp.where(valid, nr, UINT32_MAX)
+
+    # dedup: identical p-bit fingerprints are one hyperedge (membership
+    # is identical; the run keeps the multiset for merges/stats)
+    keep = valid & jnp.concatenate(
+        [jnp.ones((1,), bool), (nq[1:] != nq[:-1]) | (nr[1:] != nr[:-1])]
+    )
+    nu = jnp.sum(keep).astype(jnp.int32)
+
+    # retry loop: fresh hash seed per attempt until the graph peels
+    base = (cfg.seed * 0x9E3779B1) & 0xFFFFFFFF  # static part of the schedule
+
+    def _try_cond(carry):
+        attempt, ok, _, _ = carry
+        return ~ok & (attempt < max_attempts)
+
+    def _try_body(carry):
+        attempt, _, _, _ = carry
+        fuse_seed = (
+            jnp.uint32(base) + attempt.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+        ) & jnp.uint32(0x7FFFFFFF)
+        p0, p1, p2, fp = fuse_hash(cfg, nq, nr, fuse_seed)
+        ok, table = _peel_assign(cfg, keep, p0, p1, p2, fp)
+        return attempt + 1, ok, table, fuse_seed.astype(jnp.int32)
+
+    _, ok, table, fuse_seed = jax.lax.while_loop(
+        _try_cond,
+        _try_body,
+        (
+            jnp.zeros((), jnp.int32),
+            nu == 0,  # the empty set "peels" with seed 0 and a zero table
+            jnp.zeros((cfg.slots,), jnp.uint32),
+            jnp.zeros((), jnp.int32),
+        ),
+    )
+
+    return FuseState(
+        table=table,
+        run_q=nq,
+        run_r=nr,
+        n=n,
+        n_unique=nu,
+        fuse_seed=fuse_seed,
+        overflow=overflow | ~ok,
+    )
+
+
+def freeze_stream(
+    cfg: FuseConfig, fq, fr, n, max_attempts: int = MAX_PEEL_ATTEMPTS
+) -> FuseState:
     """Build a frozen filter from a sorted canonical fingerprint stream.
 
     ``(fq, fr)`` follow the extract/_pad_sort convention: first ``n``
     entries are the lexicographically sorted multiset, padding is
-    sentinels.  Host-level (the peel order is data-dependent), like the
-    protocol's other structural ops; the per-round assignment batches
-    run on device.  Retries fresh hash seeds until the graph peels.
+    sentinels.  Fully traceable (``n`` may be a device scalar): the
+    data-dependent peel rounds and seed retries run as ``while_loop``
+    carries.  A stream that exceeds ``cfg.capacity`` or a 2-core that
+    survives every retry sets ``overflow`` instead of raising.
     """
-    n = int(n)
+    return _freeze_impl(
+        cfg,
+        _fit_plane(fq, cfg.capacity, INT32_MAX, jnp.int32),
+        _fit_plane(fr, cfg.capacity, UINT32_MAX, jnp.uint32),
+        jnp.asarray(n, jnp.int32),
+        max_attempts,
+    )
+
+
+def freeze(cfg: FuseConfig, fq, fr, n, max_attempts: int = MAX_PEEL_ATTEMPTS):
+    """Host entry point: :func:`freeze_stream` with concrete-``n`` checks.
+
+    Raises on capacity overflow (``n`` must be a host scalar here) so
+    structural callers fail loudly instead of propagating a poisoned
+    state; traced callers use :func:`freeze_stream` directly.
+    """
+    n = operator.index(n)
     if n > cfg.capacity:
         raise ValueError(
             f"stream of {n} fingerprints exceeds frozen capacity "
             f"{cfg.capacity}; grow/resize the level first"
         )
-    nq = np.asarray(fq[: cfg.capacity]).astype(np.int32)
-    nr = np.asarray(fr[: cfg.capacity]).astype(np.uint32)
-    if nq.shape[0] < cfg.capacity:  # short stream: pad the stored run
-        pad = cfg.capacity - nq.shape[0]
-        nq = np.concatenate([nq, np.full(pad, np.iinfo(np.int32).max, np.int32)])
-        nr = np.concatenate([nr, np.full(pad, 0xFFFFFFFF, np.uint32)])
-    nq[n:] = np.iinfo(np.int32).max
-    nr[n:] = np.uint32(0xFFFFFFFF)
-
-    # dedup: identical p-bit fingerprints are one hyperedge (membership
-    # is identical; the run keeps the multiset for merges/stats)
-    keep = np.ones(n, bool)
-    if n > 1:
-        keep[1:] = (nq[1:n] != nq[: n - 1]) | (nr[1:n] != nr[: n - 1])
-    uq = jnp.asarray(nq[:n][keep])
-    ur = jnp.asarray(nr[:n][keep])
-    nu = int(keep.sum())
-
-    table = jnp.zeros((cfg.slots,), jnp.uint32)
-    fuse_seed = 0
-    if nu:
-        for attempt in range(max_attempts):
-            fuse_seed = (cfg.seed * 0x9E3779B1 + attempt * 0x85EBCA6B) & 0x7FFFFFFF
-            p0, p1, p2, fp = fuse_hash(cfg, uq, ur, fuse_seed)
-            h0 = np.asarray(p0)
-            h1 = np.asarray(p1)
-            h2 = np.asarray(p2)
-            rounds = _peel_rounds(h0, h1, h2, cfg.slots)
-            if rounds is not None:
-                break
-        else:
-            raise RuntimeError(
-                f"binary-fuse peeling failed after {max_attempts} seeds "
-                f"(n_unique={nu}, slots={cfg.slots}) — table undersized?"
-            )
-        # reverse-round assignment: each batch reads final neighbor cells
-        for idx, cell in reversed(rounds):
-            i = jnp.asarray(idx)
-            c = jnp.asarray(cell)
-            v = fp[i] ^ table[p0[i]] ^ table[p1[i]] ^ table[p2[i]]
-            table = table.at[c].set(v)
-
-    return FuseState(
-        table=table,
-        run_q=jnp.asarray(nq),
-        run_r=jnp.asarray(nr),
-        n=jnp.asarray(n, jnp.int32),
-        n_unique=jnp.asarray(nu, jnp.int32),
-        fuse_seed=jnp.asarray(fuse_seed, jnp.int32),
-        overflow=jnp.zeros((), jnp.bool_),
-    )
+    return freeze_stream(cfg, fq, fr, n, max_attempts)
 
 
 def freeze_keys(cfg: FuseConfig, keys: jnp.ndarray) -> FuseState:
     """Freeze a raw key batch (standalone construction path)."""
+    if keys.shape[0] > cfg.capacity:
+        raise ValueError(
+            f"stream of {keys.shape[0]} fingerprints exceeds frozen capacity "
+            f"{cfg.capacity}; grow/resize the level first"
+        )
     fq, fr = key_fingerprints(cfg, keys)
-    order = np.lexsort((np.asarray(fr), np.asarray(fq)))
-    return freeze(cfg, np.asarray(fq)[order], np.asarray(fr)[order], keys.shape[0])
+    fq, fr = jax.lax.sort((fq.astype(jnp.int32), fr), num_keys=2)
+    return freeze_stream(cfg, fq, fr, keys.shape[0])
 
 
 # ---------------------------------------------------------------------------

@@ -507,6 +507,28 @@ def merge_streams(aq, ar, na, bq, br, nb):
     return out_q, out_r
 
 
+def merge_streams_many(parts):
+    """Fold any number of sorted streams into one, sort-free.
+
+    ``parts`` is a sequence of ``(fq, fr, n)`` streams in the
+    extract/_pad_sort convention (same (q, r) split).  Pairwise
+    :func:`merge_streams` folds keep every pass rank arithmetic —
+    the k-way analogue used where ``multi_merge`` would pay a
+    ``lax.sort`` over the concatenation.  Returns ``(fq, fr, n)`` with
+    length ``sum(len(part))``.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_streams_many needs at least one stream")
+    aq, ar, na = parts[0]
+    na = jnp.asarray(na, jnp.int32)
+    for bq, br, nb in parts[1:]:
+        nb = jnp.asarray(nb, jnp.int32)
+        aq, ar = merge_streams(aq, ar, na, bq, br, nb)
+        na = na + nb
+    return aq, ar, na
+
+
 def resize(
     cfg: QFConfig, state: QFState, new_q: int, build=None
 ) -> tuple[QFConfig, QFState]:

@@ -33,7 +33,7 @@ class PipelineConfig:
     dedup_p: int = 30  # fingerprint bits (fp rate ~ n * 2^-p)
     dedup_fanout: int = 4
     dedup_levels: int = 3  # static disk-level depth of the cascade
-    dedup_chunk: int = 1024  # incremental-migration chunk (qf family)
+    dedup_chunk: int = 1024  # incremental-migration / settle chunk (qf, steady_qf)
     # cascade cold-tier demotion: depth below which merged-down levels
     # freeze into binary-fuse form; "auto" asks the cost model
     # (``cost_model.recommend_frozen_below``), None keeps all-QF levels.
@@ -66,6 +66,14 @@ class PipelineConfig:
             return spec
         if self.dedup_family == "qf":
             return dict(q=self.dedup_ram_q, r=self.dedup_p - self.dedup_ram_q)
+        if self.dedup_family == "steady_qf":
+            # LSM-style steady-state ingest: O(buffer) inserts, settle
+            # ticks bounded by the chunk — bounded p99 per pipeline step
+            return dict(
+                q=self.dedup_ram_q,
+                r=self.dedup_p - self.dedup_ram_q,
+                chunk=self.dedup_chunk,
+            )
         raise ValueError(f"no dedup spec mapping for {self.dedup_family!r}")
 
 

@@ -24,6 +24,8 @@ Registry name -> implementation -> paper section:
                           QFs, insert-optimized; fixed-depth level stack.
 ``"sharded_qf"``          Multi-device QF (§6 future work): quotient-prefix
                           sharding + all_to_all dispatch on a device mesh.
+``"steady_qf"``           Steady-state QF (§4 RAM buffer, always-on): O(buffer)
+                          inserts + background settle ticks — LSM-style.
 ========================  =======================================================
 
 Quickstart::
@@ -75,6 +77,7 @@ from . import (  # noqa: F401 (registration side effects)
     iostats,
     qf_filter,
     sharded,
+    steady,
     xor_fuse,
 )
 from .auto_scale import auto_scale, settle

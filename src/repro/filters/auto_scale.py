@@ -5,12 +5,16 @@ blocking one-pass ``grow``.  This driver supersedes it for long-running
 consumers (``data.pipeline``, ``serve.prefix_cache``):
 
 * **up**, incrementally where the family supports it: when the high
-  watermark (``needs_resize``) trips on a flat QF, the driver opens an
-  :mod:`incremental_resize` migration instead of re-streaming the whole
-  table under one insert — subsequent batches each move one bounded
-  chunk, and the driver collapses the migration when its device
-  predicate reports drained.  Families without an incremental path
-  (layered/bloom/sharded) keep the blocking ``grow`` settle loop.
+  watermark (``needs_resize``) trips on a flat, steady, or buffered QF,
+  the driver opens an :mod:`incremental_resize` migration instead of
+  re-streaming the whole table under one insert — subsequent batches
+  each move one bounded chunk, and the driver collapses the migration
+  (re-wrapping into the original family) when its device predicate
+  reports drained.  The cascade's ``grow`` appends an empty level
+  (free) so it keeps the direct settle loop; its geometry ``resize``
+  migrates through ``incremental_resize.begin_restructure``.  Families
+  without any incremental path (bloom/sharded) keep the blocking
+  ``grow`` settle loop.
 * **down**, on the low watermark: ``needs_shrink`` predicates encode
   per-family hysteresis (shrink only when the population fits the
   *shrunk* structure at a comfortable margin, ``shrink_load`` of its
@@ -28,7 +32,6 @@ loops keep a static size by construction.
 from __future__ import annotations
 
 from . import incremental_resize
-from .qf_filter import QFilterConfig
 from .registry import by_cfg
 
 
@@ -94,11 +97,11 @@ def auto_scale(
 
     impl = by_cfg(cfg)
     can_up = impl.needs_resize is not None and impl.grow is not None
-    use_incremental = incremental and isinstance(cfg, QFilterConfig)
+    use_incremental = incremental and incremental_resize.grows_by_migration(cfg)
 
     if can_up and bool(impl.needs_resize(cfg, state)):
         if use_incremental:
-            cfg, state = incremental_resize.begin(
+            cfg, state = incremental_resize.begin_restructure(
                 cfg, state, chunk=chunk, buf_q=buf_q
             )
             return auto_scale(
@@ -118,7 +121,9 @@ def auto_scale(
 
     if can_up and bool(impl.needs_resize(cfg, state)):
         if use_incremental:
-            return incremental_resize.begin(cfg, state, chunk=chunk, buf_q=buf_q)
+            return incremental_resize.begin_restructure(
+                cfg, state, chunk=chunk, buf_q=buf_q
+            )
         cfg, state = _settle_up(impl, cfg, state, max_steps)
     elif (
         shrink

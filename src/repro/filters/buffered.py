@@ -11,6 +11,7 @@ counters inside the state, so an entire ingest loop runs under a single
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -90,7 +91,8 @@ def flush(cfg: BufferedQFConfig, state: BufferedQFState) -> BufferedQFState:
     return _flush(cfg, state)
 
 
-def insert(cfg: BufferedQFConfig, state, keys, k=None) -> BufferedQFState:
+@functools.partial(jax.jit, static_argnums=0)
+def _insert_impl(cfg: BufferedQFConfig, state, keys, k) -> BufferedQFState:
     ram = qf_filter.insert_keys(cfg.ram, cfg.backend, state.ram, keys, k)
     state = state._replace(ram=ram)
     return jax.lax.cond(
@@ -99,6 +101,15 @@ def insert(cfg: BufferedQFConfig, state, keys, k=None) -> BufferedQFState:
         lambda s: s,
         state,
     )
+
+
+def insert(cfg: BufferedQFConfig, state, keys, k=None) -> BufferedQFState:
+    """Insert a batch; the flush ``lax.cond`` (full RAM->disk merge on
+    the taken branch) runs inside one jitted program — the eager façade
+    call costs one dispatch, not a re-trace of both branches."""
+    if k is None:
+        k = keys.shape[0]
+    return _insert_impl(cfg, state, keys, jnp.asarray(k, jnp.int32))
 
 
 def contains(cfg: BufferedQFConfig, state, keys):

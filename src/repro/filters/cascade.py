@@ -33,16 +33,17 @@ peels the merged stream into a fuse table; a later merge that
 *consumes* a frozen level re-expands it from its retained sorted
 fingerprint run, so merge/grow/shrink/``auto_scale`` keep composing
 and membership stays exact across demote -> probe -> re-expand ->
-merge.  The price is structural: peeling is data-dependent host work,
-so a frozen cascade's insert/merge/resize run host-driven (one sync at
-the collapse decision) instead of under ``lax.scan`` — the right trade
-for cold serving tiers, not for the zero-sync ingest path.  Deletes
-are refused (``UnsupportedOpError``): a fuse table cannot unlink a
-key.  ``cost_model.recommend_frozen_below`` picks k from the geometry.
+merge.  Peeling is device-resident (``fuse.freeze_stream`` hides the
+data-dependent rounds in ``while_loop`` carries), so a frozen cascade's
+insert/merge-down runs under the same zero-sync ``lax.switch`` as the
+all-QF stack.  Deletes are refused (``UnsupportedOpError``): a fuse
+table cannot unlink a key.  ``cost_model.recommend_frozen_below`` picks
+k from the geometry.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple, Optional
 
@@ -206,90 +207,51 @@ def _level_write_bytes(cfg: CascadeConfig, i: int) -> float:
     )
 
 
-def _collapse_host(cfg: CascadeConfig, state: CascadeState, full) -> CascadeState:
-    """Host-driven merge-down for frozen cascades (peeling is
-    data-dependent, so the device ``lax.switch`` path cannot demote).
-    Same collapse rule as ``_maybe_collapse``; returns the state
-    unchanged when Q0 is under the watermark or no level fits.
-
-    Everything the host decision needs — the collapse trigger, the
-    per-level counts, and the overflow flags — comes down in *one*
-    batched ``device_get`` instead of 2L+3 scalar syncs."""
-    full, q0n, counts, ovf = jax.device_get(
-        (
-            full,
-            state.q0.n,
-            jnp.stack([s.n for s in state.levels]),
-            jnp.stack([state.q0.overflow] + [s.overflow for s in state.levels]),
-        )
-    )
-    if not full:
-        return state
-    cum = q0n
-    target = None
-    for i in range(cfg.levels):
-        cum = cum + counts[i]
-        if cum <= cfg.level_cfg(i).capacity:
-            target = i
-            break
-    if target is None:
-        return state  # Q0 absorbs into its slack; overflow flags the rest
-
-    parts = [_q0_stream(cfg, state)]
-    overflow = ovf[: target + 2].any()  # q0 | levels[0..target]
-    read = 0.0
-    for j in range(target + 1):
-        parts.append(_level_stream(cfg, state, j))
-        if counts[j] > 0:
-            read += _level_read_bytes(cfg, j)
-    allq, allr = qf._pad_sort(
-        jnp.concatenate([p[0] for p in parts]),
-        jnp.concatenate([p[1] for p in parts]),
-        jnp.concatenate(
-            [jnp.arange(p[0].shape[0]) < p[2] for p in parts]
-        ),
-    )
-    total = cum
-    merged = _build_level(cfg, target, allq, allr, total, overflow)
-    io = state.io._replace(
-        seq_read_bytes=state.io.seq_read_bytes + jnp.float32(read),
-        seq_write_bytes=state.io.seq_write_bytes
-        + jnp.float32(_level_write_bytes(cfg, target)),
-        flushes=state.io.flushes + 1,
-        merges=state.io.merges + 1,
-    )
-    new_levels = tuple(
-        _empty_level(cfg, j)
-        if j < target
-        else (merged if j == target else state.levels[j])
-        for j in range(cfg.levels)
-    )
-    return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=new_levels, io=io)
+def _build_level_traced(cfg: CascadeConfig, i: int, allq, allr, total):
+    """Materialize level i from a sorted canonical stream, traceable
+    (``total`` may be a device scalar).  Frozen targets peel on device
+    (:func:`fuse.freeze_stream`); a stream that exceeds the frozen
+    capacity or refuses to peel sets the level's ``overflow`` flag."""
+    if cfg.is_frozen(i):
+        return fuse.freeze_stream(cfg.fuse_cfg(i), allq, allr, total)
+    tgt = cfg.level_cfg(i)
+    tq, tr = qf._requotient(allq, allr, _canon_cfg(cfg), tgt)
+    return qf_filter.build_fn(cfg)(tgt, tq, tr, jnp.asarray(total, jnp.int32))
 
 
 def _collapse_into(cfg: CascadeConfig, state: CascadeState, i: int) -> CascadeState:
-    """Merge Q0..Q_i into a fresh Q_i; levels above i empty (paper Fig. 5)."""
-    parts = [(cfg.q0_cfg, state.q0)] + [
-        (cfg.level_cfg(j), state.levels[j]) for j in range(i + 1)
+    """Merge Q0..Q_i into a fresh Q_i; levels above i empty (paper Fig. 5).
+
+    Every participant streams in the canonical split and the fold is
+    rank arithmetic (``merge_streams_many``, sort-free); a frozen target
+    peels on device, so the whole collapse — demotions included — stays
+    inside the ``lax.switch`` branch."""
+    parts = [_q0_stream(cfg, state)] + [
+        _level_stream(cfg, state, j) for j in range(i + 1)
     ]
-    tgt = cfg.level_cfg(i)
-    merged = qf.multi_merge(tgt, parts, build=qf_filter.build_fn(cfg))
+    allq, allr, total = qf.merge_streams_many(parts)
+    overflow = state.q0.overflow
+    for j in range(i + 1):
+        overflow = overflow | state.levels[j].overflow
+    merged = _build_level_traced(cfg, i, allq, allr, total)
+    merged = merged._replace(overflow=merged.overflow | overflow)
     # I/O: stream each participating non-empty disk level in, target out
     read = jnp.zeros((), jnp.float32)
     for j in range(i + 1):
         read = read + jnp.where(
             state.levels[j].n > 0,
-            jnp.float32(cfg.level_cfg(j).size_bytes),
+            jnp.float32(_level_read_bytes(cfg, j)),
             jnp.float32(0),
         )
     io = state.io._replace(
         seq_read_bytes=state.io.seq_read_bytes + read,
-        seq_write_bytes=state.io.seq_write_bytes + tgt.size_bytes,
+        seq_write_bytes=state.io.seq_write_bytes
+        + jnp.float32(_level_write_bytes(cfg, i)),
         flushes=state.io.flushes + 1,
         merges=state.io.merges + 1,
     )
     new_levels = tuple(
-        qf.empty(cfg.level_cfg(j)) if j < i else (merged if j == i else state.levels[j])
+        _empty_level(cfg, j) if j < i else (merged if j == i else state.levels[j])
         for j in range(cfg.levels)
     )
     return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=new_levels, io=io)
@@ -311,16 +273,21 @@ def _maybe_collapse(cfg: CascadeConfig, state: CascadeState, full) -> CascadeSta
     return jax.lax.switch(branch, [mk(i) for i in range(L)] + [lambda s: s], state)
 
 
-def insert(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
+@functools.partial(jax.jit, static_argnums=0)
+def _insert_impl(cfg: CascadeConfig, state, keys, k) -> CascadeState:
     q0 = qf_filter.insert_keys(cfg.q0_cfg, cfg.backend, state.q0, keys, k)
     state = state._replace(q0=q0)
     full = qf.load(cfg.q0_cfg, q0) >= cfg.max_load
-    if cfg.frozen_below is None:
-        return _maybe_collapse(cfg, state, full)
-    # frozen mode: the merge-down peels, which is host work — one
-    # *batched* sync (trigger + counts + overflow together) at the
-    # collapse decision instead of the zero-sync lax.switch path
-    return _collapse_host(cfg, state, full)
+    return _maybe_collapse(cfg, state, full)
+
+
+def insert(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
+    """Insert a batch; merge-downs (frozen demotions included) happen
+    inside one jitted program — the eager façade call costs one
+    dispatch, not a re-trace of the ``lax.switch`` collapse branches."""
+    if k is None:
+        k = keys.shape[0]
+    return _insert_impl(cfg, state, keys, jnp.asarray(k, jnp.int32))
 
 
 def _structures(cfg, state):
@@ -370,7 +337,10 @@ def _fused_level_hits(cfg: CascadeConfig, state, keys):
     return hits[0], [per_level[i] for i in range(cfg.levels)]
 
 
+@functools.partial(jax.jit, static_argnums=0)
 def contains(cfg: CascadeConfig, state, keys):
+    """Membership across the stack in one jitted program (the per-level
+    ``lax.cond`` guards would otherwise re-trace on every eager call)."""
     if cfg.backend == "pallas":
         q0_hit, lvl_hits = _fused_level_hits(cfg, state, keys)
         hit = q0_hit
@@ -387,6 +357,7 @@ def contains(cfg: CascadeConfig, state, keys):
     return hit
 
 
+@functools.partial(jax.jit, static_argnums=0)
 def probe(cfg: CascadeConfig, state, keys):
     """Lookup with the paper's schedule: per query still unresolved at a
     non-empty disk level, one random page read (QF cluster) or
@@ -445,6 +416,13 @@ def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
             "(binary-fuse) levels; use an all-QF cascade when the cold "
             "tier must support deletes",
         )
+    if k is None:
+        k = keys.shape[0]
+    return _delete_impl(cfg, state, keys, jnp.asarray(k, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _delete_impl(cfg: CascadeConfig, state, keys, k) -> CascadeState:
     valid = qf_filter.valid_mask(keys, k)
     structures = [(cfg.q0_cfg, state.q0)] + [
         (cfg.level_cfg(i), state.levels[i]) for i in range(cfg.levels)
@@ -474,14 +452,6 @@ def delete(cfg: CascadeConfig, state, keys, k=None) -> CascadeState:
     return CascadeState(q0=out[0], levels=tuple(out[1:]), io=io)
 
 
-def _all_parts(cfg: CascadeConfig, sa, sb):
-    return (
-        [(cfg.q0_cfg, sa.q0), (cfg.q0_cfg, sb.q0)]
-        + [(cfg.level_cfg(j), sa.levels[j]) for j in range(cfg.levels)]
-        + [(cfg.level_cfg(j), sb.levels[j]) for j in range(cfg.levels)]
-    )
-
-
 def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
     """Union of two cascades (same cfg) as ONE streaming pass into the
     smallest level that fits the combined count (paper Fig. 5's k-way
@@ -496,43 +466,30 @@ def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
     unavoidable) oversubscription — ``grow``/``resize`` the inputs
     first.
 
-    The expensive decode + sort over all 2L + 2 components runs ONCE,
-    in the deepest level's (q, r) split; requotienting is monotone
-    w.r.t. lexicographic order, so each ``lax.switch`` branch only
-    re-splits elementwise and rebuilds at its target geometry.
-
-    Frozen cascades take the host path instead: the target may need to
-    peel (and frozen inputs re-expand from their runs), which cannot
-    live under ``lax.switch``.
+    All 2L + 2 components stream in the canonical split and fold by
+    rank arithmetic (``merge_streams_many`` — sort-free); each
+    ``lax.switch`` branch re-splits elementwise and rebuilds at its
+    target geometry.  Frozen targets peel on device
+    (``fuse.freeze_stream``), frozen inputs re-expand from their
+    retained runs, so frozen and all-QF cascades share this one
+    device-resident path.
     """
-    if cfg.frozen_below is not None:
-        return _merge_host(cfg, sa, sb)
     L = cfg.levels
-    deep = cfg.level_cfg(L - 1)
-    build = qf_filter.build_fn(cfg)
-
-    qs_all, rs_all, valid_all = [], [], []
-    total = jnp.zeros((), jnp.int32)
-    overflow = jnp.zeros((), jnp.bool_)
-    for c, s in _all_parts(cfg, sa, sb):
-        fq, fr, n = qf.extract(c, s)
-        fq, fr = qf._requotient(fq, fr, c, deep)
-        qs_all.append(fq)
-        rs_all.append(fr)
-        valid_all.append(jnp.arange(fq.shape[0]) < n)
-        total = total + n
-        overflow = overflow | s.overflow
-    allq, allr = qf._pad_sort(
-        jnp.concatenate(qs_all),
-        jnp.concatenate(rs_all),
-        jnp.concatenate(valid_all),
-    )
+    parts = [_q0_stream(cfg, sa), _q0_stream(cfg, sb)]
+    for j in range(L):
+        parts.append(_level_stream(cfg, sa, j))
+        parts.append(_level_stream(cfg, sb, j))
+    allq, allr, total = qf.merge_streams_many(parts)
+    overflow = sa.q0.overflow | sb.q0.overflow
+    for s in (sa, sb):
+        for lv in s.levels:
+            overflow = overflow | lv.overflow
 
     read = jnp.zeros((), jnp.float32)
     for j in range(L):
         for s in (sa.levels[j], sb.levels[j]):
             read = read + jnp.where(
-                s.n > 0, jnp.float32(cfg.level_cfg(j).size_bytes), jnp.float32(0)
+                s.n > 0, jnp.float32(_level_read_bytes(cfg, j)), jnp.float32(0)
             )
     io = iostats.add(sa.io, sb.io)
     io = io._replace(seq_read_bytes=io.seq_read_bytes + read, merges=io.merges + 1)
@@ -542,16 +499,16 @@ def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
     branch = jnp.where(jnp.any(fits), jnp.argmax(fits), L - 1).astype(jnp.int32)
 
     def mk(i):
-        tgt = cfg.level_cfg(i)
-
         def build_at(args):
             allq, allr, io = args
-            tq, tr = qf._requotient(allq, allr, deep, tgt)
-            merged = build(tgt, tq, tr, total)
+            merged = _build_level_traced(cfg, i, allq, allr, total)
             merged = merged._replace(overflow=merged.overflow | overflow)
-            io2 = io._replace(seq_write_bytes=io.seq_write_bytes + tgt.size_bytes)
+            io2 = io._replace(
+                seq_write_bytes=io.seq_write_bytes
+                + jnp.float32(_level_write_bytes(cfg, i))
+            )
             levels = tuple(
-                merged if j == i else qf.empty(cfg.level_cfg(j)) for j in range(L)
+                merged if j == i else _empty_level(cfg, j) for j in range(L)
             )
             return CascadeState(q0=qf.empty(cfg.q0_cfg), levels=levels, io=io2)
 
@@ -562,10 +519,10 @@ def merge(cfg: CascadeConfig, sa, sb) -> CascadeState:
 
 def _restream_host(new_cfg: CascadeConfig, parts, io, overflow):
     """Collapse canonical streams into the smallest fitting level of
-    ``new_cfg`` (host-level; the shared tail of frozen merge/resize).
+    ``new_cfg`` (host-level; the tail of the geometry-changing resize).
     ``parts`` is a list of ``(fq, fr, n)`` canonical streams."""
     L = new_cfg.levels
-    total = jax.device_get(sum(p[2] for p in parts))  # one batched sync
+    total = int(jax.device_get(sum(p[2] for p in parts)))  # one batched sync
     target = next(
         (i for i in range(L) if total <= new_cfg.level_cfg(i).capacity), L - 1
     )
@@ -574,11 +531,7 @@ def _restream_host(new_cfg: CascadeConfig, parts, io, overflow):
             f"union of {total} keys exceeds the bottom frozen level's "
             f"capacity {new_cfg.fuse_cfg(target).capacity}; grow/resize first"
         )
-    allq, allr = qf._pad_sort(
-        jnp.concatenate([p[0] for p in parts]),
-        jnp.concatenate([p[1] for p in parts]),
-        jnp.concatenate([jnp.arange(p[0].shape[0]) < p[2] for p in parts]),
-    )
+    allq, allr, _ = qf.merge_streams_many(parts)
     merged = _build_level(new_cfg, target, allq, allr, total, overflow)
     io = io._replace(
         seq_write_bytes=io.seq_write_bytes
@@ -608,14 +561,6 @@ def _all_streams(cfg: CascadeConfig, state: CascadeState):
         if ns[j] > 0:
             read += _level_read_bytes(cfg, j)
     return parts, read, overflow
-
-
-def _merge_host(cfg: CascadeConfig, sa: CascadeState, sb: CascadeState):
-    pa, ra, ova = _all_streams(cfg, sa)
-    pb, rb, ovb = _all_streams(cfg, sb)
-    io = iostats.add(sa.io, sb.io)
-    io = io._replace(seq_read_bytes=io.seq_read_bytes + jnp.float32(ra + rb))
-    return _restream_host(cfg, pa + pb, io, ova or ovb)
 
 
 def needs_resize(cfg: CascadeConfig, state):

@@ -55,16 +55,27 @@ from repro.kernels import ops as kops
 from . import iostats, qf_filter
 from .iostats import IOCounters
 from .qf_filter import QFilterConfig
-from .registry import FilterImpl, register
+from .registry import FilterImpl, by_cfg, register
 
 
 class MigratingQFConfig(NamedTuple):
-    """Static config of an in-flight QF migration (jit-static, hashable)."""
+    """Static config of an in-flight QF migration (jit-static, hashable).
+
+    ``wrap`` routes *other* families through the same chunked machinery:
+    when set, it is the family config (steady / buffered / cascade) the
+    drained flat table re-wraps into at :func:`finish` — the buffered
+    QF's disk re-stream, the cascade's level-geometry change, and the
+    steady QF's growth all migrate as their flat fingerprint stream and
+    only the cheap re-wrap happens at settle time.  ``src_len`` pins the
+    stream-plane length when the source is a multi-structure fold
+    (longer than one table's slot count); 0 means the flat source's."""
 
     src: QFilterConfig  # old geometry (the frozen stream's split)
     dst: QFilterConfig  # wider geometry being built left-to-right
     buf: QFilterConfig  # small side buffer absorbing fresh inserts
     chunk: int = 1024  # entries moved per insert batch
+    wrap: tuple | None = None  # family cfg to re-wrap into at finish
+    src_len: int = 0  # stream length override (0 = src slots)
 
 
 class MigrationState(NamedTuple):
@@ -132,9 +143,250 @@ def begin(
     return mcfg, ms
 
 
+def begin_stream(
+    src: QFilterConfig,
+    fq,
+    fr,
+    n,
+    dst: QFilterConfig,
+    *,
+    chunk: int = 1024,
+    buf_q: int | None = None,
+    wrap=None,
+    io: IOCounters | None = None,
+):
+    """Open a migration from an already-decoded sorted stream.
+
+    The generic entry point behind :func:`begin_restructure`: the stream
+    may be the fold of several structures (buffered RAM+disk, all
+    cascade levels, a settled steady table), so its length is pinned in
+    the config (``src_len``) rather than derived from one table."""
+    if chunk < 1:
+        raise ValueError("chunk must be positive")
+    if buf_q is None:
+        buf_q = _default_buf_q(dst)
+    buf = dst._replace(q=buf_q, r=dst.q + dst.r - buf_q)
+    mcfg = MigratingQFConfig(
+        src=src,
+        dst=dst,
+        buf=buf,
+        chunk=chunk,
+        wrap=wrap,
+        src_len=int(fq.shape[0]),
+    )
+    base = iostats.zeros() if io is None else io
+    ms = MigrationState(
+        src_fq=jnp.asarray(fq, jnp.int32),
+        src_fr=jnp.asarray(fr, jnp.uint32),
+        src_n=jnp.asarray(n, jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        dst=qf.empty(dst.core),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        buf=qf.empty(buf.core),
+        io=base._replace(resizes=base.resizes + 1),
+    )
+    return mcfg, ms
+
+
+def _flat_of(core: qf.QFConfig, template) -> QFilterConfig:
+    """A QFilterConfig whose ``.core`` is exactly ``core`` (backend and
+    probe window carried over from the family config ``template``)."""
+    return QFilterConfig(
+        q=core.q,
+        r=core.r,
+        slack=core.slack,
+        seed=core.seed,
+        max_load=core.max_load,
+        backend=template.backend,
+    )
+
+
+def grows_by_migration(cfg) -> bool:
+    """Families whose *growth* step re-streams data (and so should take
+    the chunked path under ``auto_scale``).  The cascade is excluded:
+    its ``grow`` appends an empty level — free — and only its explicit
+    geometry ``resize`` migrates (via :func:`begin_restructure`)."""
+    from . import buffered, steady
+
+    return isinstance(
+        cfg, (QFilterConfig, steady.SteadyQFConfig, buffered.BufferedQFConfig)
+    )
+
+
+def can_migrate(cfg) -> bool:
+    """Does this family config have an incremental restructure path?"""
+    from . import buffered, cascade, steady
+
+    return isinstance(
+        cfg,
+        (
+            QFilterConfig,
+            steady.SteadyQFConfig,
+            buffered.BufferedQFConfig,
+            cascade.CascadeConfig,
+        ),
+    )
+
+
+def begin_restructure(cfg, state, *, chunk: int = 1024, buf_q=None, **target):
+    """Open a chunked migration for ANY family with a restructure path.
+
+    One decode/fold pass (no sort, no rebuild) per family:
+
+    * flat QF — :func:`begin` unchanged (``new_q``);
+    * steady QF — settle, then migrate the table to ``new_q``; the
+      drained table re-wraps as an idle steady state (``new_q``);
+    * buffered QF — RAM and disk fold into one disk-split stream that
+      migrates to the wider disk geometry (``disk_q``) — the disk
+      re-stream, amortized;
+    * cascade — every level (frozen ones from their retained runs)
+      folds into one canonical stream migrating toward the new
+      geometry's fitting level (``levels``/``fanout``); a frozen target
+      peels once on device at re-wrap time.
+
+    Returns the opaque ``(MigratingQFConfig, MigrationState)`` pair.
+    """
+    from . import buffered, cascade, steady
+
+    if isinstance(cfg, QFilterConfig):
+        return begin(
+            cfg, state, new_q=target.pop("new_q", None), chunk=chunk, buf_q=buf_q
+        )
+    if isinstance(cfg, steady.SteadyQFConfig):
+        state = steady.settle_all(cfg, state)
+        new_q = target.pop("new_q", cfg.q + 1)
+        flat_cfg, flat = cfg.flat, state.table
+        dst_core = flat_cfg._replace(q=new_q, r=cfg.q + cfg.r - new_q).core
+        wrap = steady._resolve_buf_q(
+            cfg._replace(q=new_q, r=cfg.q + cfg.r - new_q, buf_q=0)
+        )
+        steady._check_geometry(wrap)
+        fq, fr, n = qf.extract(flat_cfg.core, flat)
+        return begin_stream(
+            flat_cfg,
+            fq,
+            fr,
+            n,
+            _flat_of(dst_core, cfg),
+            chunk=chunk,
+            buf_q=buf_q,
+            wrap=wrap,
+            io=state.io,
+        )
+    if isinstance(cfg, buffered.BufferedQFConfig):
+        disk_q = target.pop("disk_q", cfg.disk_q + 1)
+        wrap = cfg._replace(disk_q=disk_q)
+        if not (wrap.ram_q < disk_q < wrap.p):
+            raise ValueError(
+                f"disk_q={disk_q} must lie strictly between ram_q={cfg.ram_q} "
+                f"and p={cfg.p}"
+            )
+        dq, dr, dn = qf.extract(cfg.disk, state.disk)
+        rq, rr, rn = qf.extract(cfg.ram, state.ram)
+        rq, rr = qf._requotient(rq, rr, cfg.ram, cfg.disk)
+        fq, fr, n = qf.merge_streams_many([(dq, dr, dn), (rq, rr, rn)])
+        io = state.io._replace(
+            seq_read_bytes=state.io.seq_read_bytes + jnp.float32(cfg.disk.size_bytes)
+        )
+        return begin_stream(
+            _flat_of(cfg.disk, cfg),
+            fq,
+            fr,
+            n,
+            _flat_of(wrap.disk, cfg),
+            chunk=chunk,
+            buf_q=buf_q,
+            wrap=wrap,
+            io=io,
+        )
+    if isinstance(cfg, cascade.CascadeConfig):
+        wrap = cfg._replace(
+            levels=target.pop("levels", cfg.levels),
+            fanout=target.pop("fanout", cfg.fanout),
+        )
+        cascade._check_geometry(wrap)
+        parts, read, overflow = cascade._all_streams(cfg, state)
+        fq, fr, n = qf.merge_streams_many(parts)
+        tgt = _cascade_target(wrap, int(jax.device_get(n)))
+        io = state.io._replace(
+            seq_read_bytes=state.io.seq_read_bytes + jnp.float32(read)
+        )
+        mcfg, ms = begin_stream(
+            _flat_of(cascade._canon_cfg(cfg), cfg),
+            fq,
+            fr,
+            n,
+            _flat_of(wrap.level_cfg(tgt), cfg),
+            chunk=chunk,
+            buf_q=buf_q,
+            wrap=wrap,
+            io=io,
+        )
+        if overflow:
+            ms = ms._replace(dst=ms.dst._replace(overflow=jnp.asarray(True)))
+        return mcfg, ms
+    raise TypeError(f"{type(cfg).__name__} has no incremental restructure path")
+
+
+def _cascade_target(wrap, total: int) -> int:
+    """Smallest level of the new geometry that fits the union count."""
+    return next(
+        (i for i in range(wrap.levels) if total <= wrap.level_cfg(i).capacity),
+        wrap.levels - 1,
+    )
+
+
+def _rewrap(mcfg: MigratingQFConfig, state: qf.QFState, io: IOCounters):
+    """Re-wrap the drained flat table as the target family's state."""
+    from . import buffered, cascade, steady
+
+    wrap = mcfg.wrap
+    if isinstance(wrap, steady.SteadyQFConfig):
+        return wrap, steady.from_flat(wrap, state, io=io)
+    if isinstance(wrap, buffered.BufferedQFConfig):
+        io = io._replace(
+            seq_write_bytes=io.seq_write_bytes + jnp.float32(wrap.disk.size_bytes)
+        )
+        return wrap, buffered.BufferedQFState(
+            ram=qf.empty(wrap.ram), disk=state, io=io
+        )
+    if isinstance(wrap, cascade.CascadeConfig):
+        tgt = _cascade_target(wrap, int(state.n))
+        io = io._replace(
+            seq_write_bytes=io.seq_write_bytes
+            + jnp.float32(cascade._level_write_bytes(wrap, tgt)),
+            merges=io.merges + 1,
+        )
+        if wrap.is_frozen(tgt):
+            fq, fr, n = qf.extract(mcfg.dst.core, state)
+            fq, fr = qf._requotient(fq, fr, mcfg.dst.core, cascade._canon_cfg(wrap))
+            merged = fuse_freeze(wrap, tgt, fq, fr, n, state.overflow)
+        else:
+            merged = state
+        levels = tuple(
+            merged if j == tgt else cascade._empty_level(wrap, j)
+            for j in range(wrap.levels)
+        )
+        return wrap, cascade.CascadeState(
+            q0=qf.empty(wrap.q0_cfg), levels=levels, io=io
+        )
+    raise TypeError(f"cannot re-wrap migration into {type(wrap).__name__}")
+
+
+def fuse_freeze(wrap, i: int, fq, fr, n, overflow):
+    """One device-resident peel of a canonical stream into frozen level
+    ``i`` of cascade config ``wrap`` (the only non-chunkable step — the
+    peel is a global algorithm — but a single fused device op)."""
+    from repro.core import fuse_filter as fuse
+
+    st = fuse.freeze_stream(wrap.fuse_cfg(i), fq, fr, n)
+    return st._replace(overflow=st.overflow | overflow)
+
+
 def blank(mcfg: MigratingQFConfig) -> MigrationState:
     """An all-zero state with this config's shapes (snapshot restore)."""
-    t = mcfg.src.core.total_slots
+    t = mcfg.src_len or mcfg.src.core.total_slots
     return MigrationState(
         src_fq=jnp.full((t,), qf.INT32_MAX, jnp.int32),
         src_fr=jnp.full((t,), qf.UINT32_MAX, jnp.uint32),
@@ -286,6 +538,8 @@ def finish(mcfg: MigratingQFConfig, ms: MigrationState):
         state = state._replace(
             overflow=state.overflow | ms.dst.overflow | ms.buf.overflow
         )
+    if mcfg.wrap is not None:
+        return _rewrap(mcfg, state, ms.io)
     return mcfg.dst, state
 
 
@@ -303,14 +557,14 @@ def _make(**spec):
 
 
 def _grow(mcfg: MigratingQFConfig, ms: MigrationState):
-    """Settle, then take the flat QF's canonical doubling step."""
+    """Settle, then take the (possibly re-wrapped) family's doubling step."""
     cfg, state = finish(mcfg, ms)
-    return qf_filter.grow(cfg, state)
+    return by_cfg(cfg).grow(cfg, state)
 
 
-def _resize(mcfg: MigratingQFConfig, ms: MigrationState, new_q: int):
+def _resize(mcfg: MigratingQFConfig, ms: MigrationState, **kw):
     cfg, state = finish(mcfg, ms)
-    return qf_filter.resize(cfg, state, new_q)
+    return by_cfg(cfg).resize(cfg, state, **kw)
 
 
 def stats(mcfg: MigratingQFConfig, ms: MigrationState):

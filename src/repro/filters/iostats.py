@@ -25,10 +25,11 @@ class IOCounters(NamedTuple):
     """Pytree of device scalars mirroring the fields of ``IOLog``.
 
     ``resizes`` (structural grow/resize passes; their streaming traffic
-    is charged into the seq byte counters) and ``migrate_chunks``
-    (bounded incremental-resize chunk moves, each charging its own
-    chunk-sized seq read/write) have no ``IOLog`` counterpart and are
-    reported only through ``stats``.
+    is charged into the seq byte counters), ``migrate_chunks`` (bounded
+    incremental-resize chunk moves, each charging its own chunk-sized
+    seq read/write) and ``settles`` (background buffer folds — the
+    LSM-style compaction ticks of the steady-state families) have no
+    ``IOLog`` counterpart and are reported only through ``stats``.
     """
 
     rand_page_reads: jnp.ndarray  # int32
@@ -39,6 +40,7 @@ class IOCounters(NamedTuple):
     merges: jnp.ndarray  # int32
     resizes: jnp.ndarray  # int32
     migrate_chunks: jnp.ndarray  # int32
+    settles: jnp.ndarray  # int32
 
 
 def zeros() -> IOCounters:
@@ -52,6 +54,7 @@ def zeros() -> IOCounters:
         merges=jnp.zeros((), jnp.int32),
         resizes=jnp.zeros((), jnp.int32),
         migrate_chunks=jnp.zeros((), jnp.int32),
+        settles=jnp.zeros((), jnp.int32),
     )
 
 

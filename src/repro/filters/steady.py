@@ -1,0 +1,573 @@
+"""Steady-state quotient filter: always-on write buffer + background settle.
+
+The flat QF's ``insert`` rewrites a quotient run in place — O(cluster)
+per batch, and the paper's whole point is that such in-place writes are
+what thrash flash.  This family keeps the paper's RAM-buffer trick (§4)
+permanently resident: every insert lands in a small buffer QF
+(O(buffer) always), and the fold into the main table happens as
+*background settle ticks* — the LSM compaction pattern applied to one
+table.
+
+A settle is the incremental-resize machinery turned on itself — and
+even its *open* tick is O(buffer), not O(table):
+
+* **open** — when the buffer crosses its watermark (``settle_load``)
+  and no settle is running, only the *buffer* decodes (O(buffer)) into
+  a small sorted stream; the table's own sorted stream is the
+  ``out`` planes **retained from the previous settle** (the drain
+  materializes the merged stream as it emits it), so no O(table)
+  extract happens on the insert path.  Rare paths that mutate the
+  table behind the planes' back (``delete``, a forced early settle,
+  ``from_flat`` re-wraps) drop the ``clean`` flag and the next open
+  pays one ``qf.extract`` inside a ``lax.cond`` branch.  The table
+  planes then reset empty;
+* **drain** — each subsequent insert rank-merges one bounded ``chunk``
+  window of the two sorted streams (table stream + buffer stream;
+  ``lex_searchsorted`` + scatter, sort-free — the k smallest entries
+  of two sorted streams lie within the first k of each) and appends it
+  via ``kernels.ops.build_chunk`` (strictly left-to-right; no
+  requotient — both streams are kept in the table's (q, r) split).
+  When the buffer refills faster than the drain retires the streams,
+  ticks widen to ``pressure`` chunks (``kernels.ops.build_span``) so
+  the settle always outruns the writer before the buffer can overflow.
+
+Membership is exact at every cursor position, mirroring
+``incremental_resize``: entries already drained answer from the
+partial table, the pending suffixes ``[cursor, src_n)`` and
+``[bcursor, bsrc_n)`` from binary searches of the two stream
+suffixes, fresh keys from the buffer — ``contains`` ORs the disjoint
+slices, so there are no false negatives mid-settle and no extra false
+positives.
+
+Structural ops (``delete``/``merge``/``resize``/``grow``/``shrink``)
+settle fully first (one fused device pass — the only O(table) ops in
+the family, all off the insert hot path); growth through
+``filters.auto_scale`` routes the table through the chunked
+``incremental_resize`` migration instead, so even a doubling never
+blocks an insert.  ``IOCounters.settles`` counts the folds;
+drain ticks charge the usual chunk-sized sequential bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quotient_filter as qf
+from repro.kernels import ops as kops
+
+from . import iostats, qf_filter
+from .iostats import IOCounters
+from .qf_filter import QFilterConfig
+from .registry import FilterImpl, register
+
+
+class SteadyQFConfig(NamedTuple):
+    """Flat-QF geometry plus the steady-state write-buffer knobs."""
+
+    q: int
+    r: int
+    buf_q: int = 0  # write-buffer buckets; 0 = auto (max(8, q - 3))
+    slack: int = 1024
+    seed: int = 0
+    max_load: float = 0.75
+    backend: str = "reference"
+    window: int = 256
+    shrink_load: float = 0.4
+    chunk: int = 256  # stream entries drained per insert tick
+    settle_load: float = 0.5  # buffer load that opens a settle
+    pressure: int = 8  # tick multiplier once the buffer is 3/4 full
+
+    @property
+    def flat(self) -> QFilterConfig:
+        """The equivalent flat-QF config (structural ops delegate here)."""
+        return QFilterConfig(
+            q=self.q,
+            r=self.r,
+            slack=self.slack,
+            seed=self.seed,
+            max_load=self.max_load,
+            backend=self.backend,
+            window=self.window,
+            shrink_load=self.shrink_load,
+        )
+
+    @property
+    def table(self) -> qf.QFConfig:
+        return self.flat.core
+
+    @property
+    def buf(self) -> qf.QFConfig:
+        # the buffer re-splits the same p-bit fingerprints at buf_q, so
+        # requotienting into the table split is lossless and monotone
+        return qf.QFConfig(
+            q=self.buf_q,
+            r=self.q + self.r - self.buf_q,
+            slack=max(64, self.slack // 8),
+            seed=self.seed,
+            max_load=self.max_load,
+        )
+
+    @property
+    def stream_len(self) -> int:
+        """Settle-stream length: a full table + buffer fold must fit."""
+        return self.table.total_slots + self.buf.total_slots
+
+
+class SteadyQFState(NamedTuple):
+    """Pure pytree: main table + write buffer + in-flight settle streams.
+
+    Invariant: every stream plane is a lexicographically sorted valid
+    prefix followed by sentinel padding, so the ``contains`` suffix
+    binary searches never see garbage.  ``out`` holds the merged stream
+    the drain has emitted so far; once a settle completes it equals the
+    table's sorted multiset and ``clean`` goes up — the next settle's
+    open reads it back instead of paying an O(table) ``qf.extract``.
+    """
+
+    table: qf.QFState  # holds the drained stream prefix when settling
+    buf: qf.QFState  # every fresh insert lands here first
+    src_fq: jnp.ndarray  # int32[table slots]: table-side settle stream
+    src_fr: jnp.ndarray  # uint32[table slots]
+    src_n: jnp.ndarray  # int32 scalar: valid prefix of the table stream
+    cursor: jnp.ndarray  # int32 scalar: [cursor, src_n) still pending
+    bsrc_fq: jnp.ndarray  # int32[buf slots]: buffer-side settle stream
+    bsrc_fr: jnp.ndarray  # uint32[buf slots] (already in the table split)
+    bsrc_n: jnp.ndarray  # int32 scalar: valid prefix of the buffer stream
+    bcursor: jnp.ndarray  # int32 scalar: [bcursor, bsrc_n) still pending
+    out_fq: jnp.ndarray  # int32[table slots]: merged stream, drain-built
+    out_fr: jnp.ndarray  # uint32[table slots]
+    clean: jnp.ndarray  # bool scalar: out[:table.n] == sorted table
+    last_pos: jnp.ndarray  # int32 build_chunk carry (-1 initially)
+    last_fq: jnp.ndarray  # int32 build_chunk carry (-1 initially)
+    io: IOCounters
+
+
+def _resolve_buf_q(cfg: SteadyQFConfig) -> SteadyQFConfig:
+    buf_q = cfg.buf_q or max(8, cfg.q - 3)
+    return cfg._replace(buf_q=buf_q)
+
+
+def _check_geometry(cfg: SteadyQFConfig) -> None:
+    qf_filter._check_backend(cfg)
+    if not (1 <= cfg.buf_q < cfg.q):
+        raise ValueError(f"buf_q must be in [1, q), got {cfg.buf_q} vs q={cfg.q}")
+    max_r = 31 if cfg.backend == "pallas" else 32
+    if cfg.q + cfg.r - cfg.buf_q > max_r:
+        raise ValueError(
+            f"buffer remainder p - buf_q = {cfg.q + cfg.r - cfg.buf_q} "
+            f"exceeds {max_r} bits; raise buf_q"
+        )
+    if cfg.chunk < 1 or cfg.pressure < 1:
+        raise ValueError("chunk and pressure must be positive")
+    if not (0.0 < cfg.settle_load <= 1.0):
+        raise ValueError("settle_load must be in (0, 1]")
+
+
+def _sentinel_planes(n: int):
+    return (
+        jnp.full((n,), qf.INT32_MAX, jnp.int32),
+        jnp.full((n,), qf.UINT32_MAX, jnp.uint32),
+    )
+
+
+def from_flat(cfg: SteadyQFConfig, table: qf.QFState, io=None) -> SteadyQFState:
+    """Wrap a settled flat-QF table as an idle steady state.
+
+    The wrapped table's sorted planes are unknown, so ``clean`` is down
+    (unless the table is empty — sentinels describe it exactly) and the
+    first settle pays one extract."""
+    fq, fr = _sentinel_planes(cfg.table.total_slots)
+    # distinct buffers for the out planes: the jitted insert step donates
+    # the state, and one buffer may not be donated twice
+    ofq, ofr = _sentinel_planes(cfg.table.total_slots)
+    bq, br = _sentinel_planes(cfg.buf.total_slots)
+    return SteadyQFState(
+        table=table,
+        buf=qf.empty(cfg.buf),
+        src_fq=fq,
+        src_fr=fr,
+        src_n=jnp.zeros((), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        bsrc_fq=bq,
+        bsrc_fr=br,
+        bsrc_n=jnp.zeros((), jnp.int32),
+        bcursor=jnp.zeros((), jnp.int32),
+        out_fq=ofq,
+        out_fr=ofr,
+        clean=jnp.asarray(table.n == 0, jnp.bool_),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        io=iostats.zeros() if io is None else io,
+    )
+
+
+def make(**spec):
+    cfg = _resolve_buf_q(SteadyQFConfig(**spec))
+    _check_geometry(cfg)
+    return cfg, from_flat(cfg, qf.empty(cfg.table))
+
+
+# ---------------------------------------------------------------------------
+# Settle machinery (all traceable; composed inside the jitted insert)
+# ---------------------------------------------------------------------------
+
+
+def _open_settle(cfg: SteadyQFConfig, s: SteadyQFState) -> SteadyQFState:
+    """Arm the two settle streams; reset table and buffer planes.
+
+    O(buffer): the buffer decodes (it is small by construction) and the
+    table's sorted stream comes from the retained ``out`` planes of the
+    previous settle.  Only when ``clean`` is down (the table was
+    mutated directly — delete, forced settle, re-wrap) does the taken
+    ``lax.cond`` branch pay the O(table) decode."""
+    tq, tr = jax.lax.cond(
+        s.clean,
+        lambda st: (st.out_fq, st.out_fr),
+        lambda st: qf.extract(cfg.table, st.table)[:2],
+        s,
+    )
+    bq, br, bn = qf.extract(cfg.buf, s.buf)
+    bq, br = qf._requotient(bq, br, cfg.buf, cfg.table)
+    io = s.io._replace(
+        flushes=s.io.flushes + 1,
+        settles=s.io.settles + 1,
+    )
+    ofq, ofr = _sentinel_planes(cfg.table.total_slots)
+    return SteadyQFState(
+        table=qf.empty(cfg.table)._replace(overflow=s.table.overflow | s.buf.overflow),
+        buf=qf.empty(cfg.buf),
+        src_fq=tq,
+        src_fr=tr,
+        src_n=s.table.n,
+        cursor=jnp.zeros((), jnp.int32),
+        bsrc_fq=bq,
+        bsrc_fr=br,
+        bsrc_n=bn,
+        bcursor=jnp.zeros((), jnp.int32),
+        out_fq=ofq,
+        out_fr=ofr,
+        clean=jnp.zeros((), jnp.bool_),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        io=io,
+    )
+
+
+def _window(fq, fr, cursor, n, span):
+    """Sentinel-padded gather of the next ``span`` pending entries."""
+    idx = cursor + jnp.arange(span, dtype=jnp.int32)
+    valid = idx < n
+    gi = jnp.clip(idx, 0, fq.shape[0] - 1)
+    wq = jnp.where(valid, fq[gi], qf.INT32_MAX)
+    wr = jnp.where(valid, fr[gi], qf.UINT32_MAX)
+    return wq, wr, jnp.sum(valid, dtype=jnp.int32)
+
+
+def _merge_window(aq, ar, na, bq, br, nb, span: int):
+    """Rank-merge two sorted sentinel-padded windows; count how many of
+    each side land in the emitted ``span`` prefix (``merge_streams``'
+    arithmetic, plus the consumed-split the cursors need)."""
+    la, lb = aq.shape[0], bq.shape[0]
+    ia = jnp.arange(la, dtype=jnp.int32)
+    ib = jnp.arange(lb, dtype=jnp.int32)
+    ra = ia + qf.lex_searchsorted(bq, br, aq, ar, "left")
+    rb = ib + qf.lex_searchsorted(aq, ar, bq, br, "right")
+    ra = jnp.where(ia < na, ra, nb + ia)
+    rb = jnp.where(ib < nb, rb, la + ib)
+    mq = jnp.full((la + lb,), qf.INT32_MAX, jnp.int32).at[ra].set(aq)
+    mr = jnp.full((la + lb,), qf.UINT32_MAX, jnp.uint32).at[ra].set(ar)
+    mq = mq.at[rb].set(bq)
+    mr = mr.at[rb].set(br)
+    adv_a = jnp.sum((ia < na) & (ra < span), dtype=jnp.int32)
+    adv_b = jnp.sum((ib < nb) & (rb < span), dtype=jnp.int32)
+    return mq[:span], mr[:span], adv_a, adv_b
+
+
+def _drain(cfg: SteadyQFConfig, s: SteadyQFState, steps: int) -> SteadyQFState:
+    """Merge up to ``steps * chunk`` pending stream entries into the table.
+
+    One rank-merge of two chunk windows (the k smallest entries of two
+    sorted streams lie within the first k of each) feeds the
+    left-to-right append AND materializes into the ``out`` planes, so
+    a completed settle leaves the table's sorted stream behind for the
+    next open.  Masked no-op once drained, so it is safe to run
+    unconditionally per insert."""
+    span = cfg.chunk * steps
+    aq, ar, na = _window(s.src_fq, s.src_fr, s.cursor, s.src_n, span)
+    bq, br, nb = _window(s.bsrc_fq, s.bsrc_fr, s.bcursor, s.bsrc_n, span)
+    mq, mr, adv_a, adv_b = _merge_window(aq, ar, na, bq, br, nb, span)
+    moved = adv_a + adv_b
+    append = kops.build_chunk if steps == 1 else kops.build_span
+    table, last_pos, last_fq = append(
+        cfg.table, s.table, mq, mr, moved, s.last_pos, s.last_fq
+    )
+    # materialize ONLY the emitted entries into the retained planes
+    # (``merged[:moved]`` — the real entries sort ahead of the window
+    # sentinels).  Lanes >= moved route out of range and drop: an idle
+    # tick after ``settle_all`` reset the cursors to 0, so an unmasked
+    # scatter would overwrite the retained prefix with sentinels
+    done = s.cursor + s.bcursor
+    lane = jnp.arange(span, dtype=jnp.int32)
+    oi = jnp.where(lane < moved, done + lane, jnp.int32(s.out_fq.shape[0]))
+    out_fq = s.out_fq.at[oi].set(mq, mode="drop")
+    out_fr = s.out_fr.at[oi].set(mr, mode="drop")
+    cursor = s.cursor + adv_a
+    bcursor = s.bcursor + adv_b
+    complete = (cursor >= s.src_n) & (bcursor >= s.bsrc_n)
+    io = s.io._replace(
+        seq_read_bytes=s.io.seq_read_bytes
+        + moved.astype(jnp.float32) * (cfg.table.bits_per_slot / 8.0),
+        seq_write_bytes=s.io.seq_write_bytes
+        + moved.astype(jnp.float32) * (cfg.table.bits_per_slot / 8.0),
+        migrate_chunks=s.io.migrate_chunks + (moved + cfg.chunk - 1) // cfg.chunk,
+    )
+    return s._replace(
+        cursor=cursor,
+        bcursor=bcursor,
+        table=table,
+        out_fq=out_fq,
+        out_fr=out_fr,
+        clean=s.clean | ((moved > 0) & complete),
+        last_pos=last_pos,
+        last_fq=last_fq,
+        io=io,
+    )
+
+
+def _watermark(cfg: SteadyQFConfig) -> int:
+    return max(1, int(cfg.settle_load * cfg.buf.capacity))
+
+
+def _pressure_mark(cfg: SteadyQFConfig) -> int:
+    return max(1, (3 * cfg.buf.capacity) // 4)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _insert_step(cfg: SteadyQFConfig, s: SteadyQFState, keys, kk) -> SteadyQFState:
+    def _normal(st: SteadyQFState) -> SteadyQFState:
+        # open a settle when the buffer crossed its watermark and the
+        # previous stream is fully retired (settles never overlap) ...
+        idle = (st.cursor >= st.src_n) & (st.bcursor >= st.bsrc_n)
+        want = idle & (st.buf.n >= jnp.int32(_watermark(cfg)))
+        st = jax.lax.cond(want, lambda x: _open_settle(cfg, x), lambda x: x, st)
+        # ... run one background tick, widened under buffer pressure so
+        # the drain outruns the writer ...
+        st = jax.lax.cond(
+            st.buf.n >= jnp.int32(_pressure_mark(cfg)),
+            lambda x: _drain(cfg, x, cfg.pressure),
+            lambda x: _drain(cfg, x, 1),
+            st,
+        )
+        # ... then the insert itself: O(buffer), unconditionally
+        buf = qf_filter.insert_keys(cfg.buf, cfg.backend, st.buf, keys, kk)
+        return st._replace(buf=buf)
+
+    def _forced(st: SteadyQFState) -> SteadyQFState:
+        # the batch would overflow the buffer (dropping keys on the
+        # floor): settle everything NOW and take the batch straight into
+        # the table.  This is the early-settle escape hatch — exact for
+        # any batch size, at stop-the-world cost, so size ``buf_q`` for
+        # your batch if tail latency matters.
+        st = _settle_body(cfg, st)
+        table = qf_filter.insert_keys(cfg.table, cfg.backend, st.table, keys, kk)
+        # the in-place insert bypassed the retained planes; this path is
+        # already O(table), so re-extract here and keep the next settle
+        # open O(buffer)
+        ofq, ofr, _ = qf.extract(cfg.table, table)
+        return st._replace(
+            table=table,
+            out_fq=ofq,
+            out_fr=ofr,
+            clean=jnp.ones((), jnp.bool_),
+        )
+
+    forced = s.buf.n + kk > jnp.int32(cfg.buf.capacity)
+    return jax.lax.cond(forced, _forced, _normal, s)
+
+
+def insert(cfg: SteadyQFConfig, state: SteadyQFState, keys, k=None):
+    """O(buffer) insert + one bounded settle tick, as ONE jitted step.
+
+    The state is donated (callers use the returned state); no call ever
+    pays more than the buffer insert plus ``pressure * chunk`` stream
+    moves — the flat QF's in-place run rewrite never happens here.
+    """
+    kk = jnp.asarray(keys.shape[0] if k is None else k, jnp.int32)
+    return _insert_step(cfg, state, keys, kk)
+
+
+def _suffix_hit(fq_plane, fr_plane, cursor, fq, fr):
+    """Any occurrence of (fq, fr) in the still-pending stream suffix."""
+    lo = qf.lex_searchsorted(fq_plane, fr_plane, fq, fr, "left")
+    hi = qf.lex_searchsorted(fq_plane, fr_plane, fq, fr, "right")
+    return hi > jnp.maximum(lo, cursor)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def contains(cfg: SteadyQFConfig, state: SteadyQFState, keys):
+    """MAY-CONTAIN across the four disjoint slices (exact mid-settle)."""
+    fq, fr = qf.fingerprints(cfg.table, keys)
+    hit = _suffix_hit(state.src_fq, state.src_fr, state.cursor, fq, fr)
+    hit = hit | _suffix_hit(state.bsrc_fq, state.bsrc_fr, state.bcursor, fq, fr)
+    hit = hit | qf_filter.contains_keys(
+        cfg.table, cfg.backend, state.table, keys, cfg.window
+    )
+    return hit | qf_filter.contains_keys(
+        cfg.buf, cfg.backend, state.buf, keys, cfg.window
+    )
+
+
+def _settle_body(cfg: SteadyQFConfig, s: SteadyQFState) -> SteadyQFState:
+    # drain whatever the streams still hold in ONE fused span append
+    steps = -(-cfg.stream_len // cfg.chunk)
+    pending = (s.src_n - s.cursor) + (s.bsrc_n - s.bcursor)
+    busy = (pending > 0) | (s.buf.n > 0)
+    s = _drain(cfg, s, steps)
+    # fold the buffer in with one sort-free two-stream merge + rebuild
+    tq, tr, tn = qf.extract(cfg.table, s.table)
+    bq, br, bn = qf.extract(cfg.buf, s.buf)
+    bq, br = qf._requotient(bq, br, cfg.buf, cfg.table)
+    allq, allr = qf.merge_streams(tq, tr, tn, bq, br, bn)
+    table = qf_filter.build_fn(cfg)(cfg.table, allq, allr, tn + bn)
+    table = table._replace(overflow=table.overflow | s.table.overflow | s.buf.overflow)
+    fq, fr = _sentinel_planes(cfg.table.total_slots)
+    bfq, bfr = _sentinel_planes(cfg.buf.total_slots)
+    T = cfg.table.total_slots
+    io = s.io._replace(settles=s.io.settles + busy.astype(jnp.int32))
+    return s._replace(
+        table=table,
+        buf=qf.empty(cfg.buf),
+        src_fq=fq,
+        src_fr=fr,
+        src_n=jnp.zeros((), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        bsrc_fq=bfq,
+        bsrc_fr=bfr,
+        bsrc_n=jnp.zeros((), jnp.int32),
+        bcursor=jnp.zeros((), jnp.int32),
+        # the merged stream IS the table's sorted contents: retain it so
+        # the next open skips the extract (n <= capacity < total_slots)
+        out_fq=allq[:T],
+        out_fr=allr[:T],
+        clean=jnp.ones((), jnp.bool_),
+        last_pos=jnp.full((), -1, jnp.int32),
+        last_fq=jnp.full((), -1, jnp.int32),
+        io=io,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def settle_all(cfg: SteadyQFConfig, state: SteadyQFState) -> SteadyQFState:
+    """Retire the stream and fold the buffer — the table then holds the
+    whole multiset.  O(table), used by the structural ops only."""
+    return _settle_body(cfg, state)
+
+
+def delete(cfg: SteadyQFConfig, state: SteadyQFState, keys, k=None):
+    """Settle, then delete one copy per key from the table (exact)."""
+    state = settle_all(cfg, state)
+    fq, fr = qf.fingerprints(cfg.table, keys)
+    table = qf_filter.delete_masked(
+        cfg.table, state.table, fq, fr, qf_filter.valid_mask(keys, k)
+    )
+    # deletes are off the hot path (the settle above is already
+    # O(table)): re-extract the retained planes now so the NEXT settle
+    # open — which IS on the hot path — stays O(buffer)
+    ofq, ofr, _ = qf.extract(cfg.table, table)
+    return state._replace(
+        table=table, out_fq=ofq, out_fr=ofr, clean=jnp.ones((), jnp.bool_)
+    )
+
+
+def merge(cfg: SteadyQFConfig, sa: SteadyQFState, sb: SteadyQFState):
+    """Union of two steady filters (same cfg): settle both, merge tables."""
+    sa = settle_all(cfg, sa)
+    sb = settle_all(cfg, sb)
+    core = cfg.table
+    table = qf.merge(core, core, core, sa.table, sb.table)
+    io = iostats.add(sa.io, sb.io)
+    io = io._replace(merges=io.merges + 1)
+    return from_flat(cfg, table, io=io)
+
+
+def _total(state: SteadyQFState) -> jnp.ndarray:
+    return (
+        state.table.n
+        + state.buf.n
+        + (state.src_n - state.cursor)
+        + (state.bsrc_n - state.bcursor)
+    )
+
+
+def needs_resize(cfg: SteadyQFConfig, state: SteadyQFState):
+    """Device predicate: whole population at/over the table's max load."""
+    return _total(state) >= jnp.int32(cfg.table.capacity)
+
+
+def resize(cfg: SteadyQFConfig, state: SteadyQFState, new_q: int):
+    """Settle, re-split the table at ``new_q``, re-wrap (host-level).
+
+    ``buf_q`` re-derives from the new ``q`` unless it was pinned
+    explicitly out of the auto band."""
+    state = settle_all(cfg, state)
+    flat_cfg, table = qf_filter.resize(cfg.flat, state.table, new_q)
+    ncfg = _resolve_buf_q(
+        cfg._replace(q=flat_cfg.q, r=flat_cfg.r, buf_q=0)
+    )
+    _check_geometry(ncfg)
+    io = state.io._replace(resizes=state.io.resizes + 1)
+    return ncfg, from_flat(ncfg, table, io=io)
+
+
+def grow(cfg: SteadyQFConfig, state: SteadyQFState):
+    return resize(cfg, state, cfg.q + 1)
+
+
+def needs_shrink(cfg: SteadyQFConfig, state: SteadyQFState):
+    if not qf_filter._can_halve(cfg.flat) or cfg.q - 1 <= cfg.buf_q:
+        return jnp.zeros((), jnp.bool_)
+    halved = cfg.table._replace(q=cfg.q - 1, r=cfg.r + 1)
+    return _total(state) <= jnp.int32(cfg.shrink_load * halved.capacity)
+
+
+def shrink(cfg: SteadyQFConfig, state: SteadyQFState):
+    if not qf_filter._can_halve(cfg.flat):
+        raise ValueError(f"cannot shrink q={cfg.q}, r={cfg.r} further")
+    return resize(cfg, state, cfg.q - 1)
+
+
+def stats(cfg: SteadyQFConfig, state: SteadyQFState):
+    return {
+        "n": _total(state),
+        "load": _total(state).astype(jnp.float32) / cfg.table.m,
+        "buffered": state.buf.n,
+        "pending": (state.src_n - state.cursor) + (state.bsrc_n - state.bcursor),
+        "settling": (state.cursor < state.src_n) | (state.bcursor < state.bsrc_n),
+        "overflow": state.table.overflow | state.buf.overflow,
+        "size_bytes": cfg.table.size_bytes + cfg.buf.size_bytes,
+        **state.io._asdict(),
+    }
+
+
+IMPL = register(
+    FilterImpl(
+        name="steady_qf",
+        paper_section="§4 RAM buffer, kept always-on (LSM-style steady state)",
+        cfg_cls=SteadyQFConfig,
+        make=make,
+        insert=insert,
+        contains=contains,
+        stats=stats,
+        delete=delete,
+        merge=merge,
+        needs_resize=needs_resize,
+        grow=grow,
+        resize=resize,
+        needs_shrink=needs_shrink,
+        shrink=shrink,
+    )
+)

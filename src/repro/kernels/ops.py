@@ -253,9 +253,34 @@ def fuse_lookup(
     )
 
 
-def fuse_contains(cfg: ffc.FuseConfig, state: ffc.FuseState, keys: jnp.ndarray, **kw):
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("mode", "tile_t", "wblk")
+)
+def _fuse_contains_impl(cfg, state, keys, *, mode, tile_t, wblk):
     fq, fr = ffc.key_fingerprints(cfg, keys)
-    return fuse_lookup(cfg, state, fq, fr, **kw)
+    return _fuse_lookup(cfg, state, fq, fr, mode=mode, tile_t=tile_t, wblk=wblk)
+
+
+def fuse_contains(
+    cfg: ffc.FuseConfig,
+    state: ffc.FuseState,
+    keys: jnp.ndarray,
+    *,
+    mode: str | None = None,
+    interpret: bool | None = None,
+    tile_t: int = 128,
+    wblk: int = 2048,
+):
+    """Key-level fuse probe: hash + lookup under ONE jitted program (the
+    ~30-op fingerprint hash costs milliseconds dispatched eagerly)."""
+    return _fuse_contains_impl(
+        cfg,
+        state,
+        keys,
+        mode=dispatch.resolve(mode, interpret),
+        tile_t=tile_t,
+        wblk=wblk,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,12 @@ class PrefixCacheFilter:
     FP (wasted remote probe) rate, so provision ``r`` with the headroom
     you care about.
 
+    ``family="steady_qf"`` swaps in the steady-state QF: every insert is
+    O(buffer) with LSM-style background settle ticks folding the buffer
+    into the table, so request-path p99 stays bounded even between
+    growth episodes (the flat QF's in-place run rewrites are the other
+    latency tail; see ``benchmarks/bench_steady_state.py``).
+
     ``family="cascade"`` backs the filter with the cascade instead (Q0
     in RAM, cold levels on flash) for caches whose population outgrows
     a flat RAM table; ``frozen_below=k`` additionally demotes cascade
@@ -53,11 +59,16 @@ class PrefixCacheFilter:
                  backend: str = "reference", auto_scale: bool = True,
                  chunk: int = 2048, family: str = "qf",
                  frozen_below: int | None = None, **family_spec):
-        if family == "qf":
+        if family in ("qf", "steady_qf"):
             if frozen_below is not None:
                 raise ValueError("frozen_below needs family='cascade'")
+            if family == "steady_qf":
+                # steady-state ingest: O(buffer) insert per request batch
+                # with background settle ticks — bounded p99 even while
+                # the cache churns (see benchmarks/bench_steady_state.py)
+                family_spec.setdefault("chunk", chunk)
             self.cfg, self.state = filters.make(
-                "qf", q=q, r=r, seed=seed, backend=backend
+                family, q=q, r=r, seed=seed, backend=backend, **family_spec
             )
         elif family == "cascade":
             family_spec.setdefault("ram_q", q)
@@ -69,7 +80,7 @@ class PrefixCacheFilter:
             )
         else:
             raise ValueError(
-                f"family must be 'qf' or 'cascade', got {family!r}"
+                f"family must be 'qf', 'steady_qf' or 'cascade', got {family!r}"
             )
         self.auto_scale = auto_scale
         self.chunk = chunk

@@ -35,6 +35,8 @@ CASES = {
         dict(ram_q=8, p=26, fanout=2, levels=4, frozen_below=1),
     ),
     "sharded_qf": ("sharded_qf", dict(q=12, r=10, n_shards=1)),
+    "steady_qf": ("steady_qf", dict(q=12, r=18)),
+    "steady_qf_pallas": ("steady_qf", dict(q=12, r=18, backend="pallas")),
     # frozen family: capacity covers the merge test's 2N-key union
     "xor_fuse": ("xor_fuse", dict(capacity=2600, p=26)),
     "xor_fuse_pallas": ("xor_fuse", dict(capacity=2600, p=26, backend="pallas")),

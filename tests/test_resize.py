@@ -59,6 +59,7 @@ GROW_CASES = {
     "buffered_qf": ("buffered_qf", dict(ram_q=7, disk_q=10, p=26), 64),
     "cascade": ("cascade", dict(ram_q=7, p=30, fanout=4, levels=1), 64),
     "sharded_qf": ("sharded_qf", dict(q=8, r=16, n_shards=1), 64),
+    "steady_qf": ("steady_qf", dict(q=9, r=16), 64),
 }
 
 
@@ -70,6 +71,8 @@ def _keys(seed, n, lo=0, hi=2**31):
 def _initial_capacity(name, cfg) -> int:
     if name == "qf":
         return cfg.core.capacity
+    if name == "steady_qf":
+        return cfg.table.capacity
     if name == "buffered_qf":
         return cfg.disk.capacity
     if name == "cascade":

@@ -1,0 +1,208 @@
+"""LSM-style steady state (``steady_qf``): exactness under settling.
+
+Pins the claims that make the always-on write buffer + background
+settle safe to leave permanently enabled:
+
+* **settle-cursor exactness** — while a settle drains, membership over
+  the table prefix, both in-flight stream suffixes, and the (new)
+  buffer has no false negatives at *every* cursor position, driven one
+  chunk-tick at a time;
+* **buffer overflow forces an early settle** — a batch larger than the
+  buffer takes the forced path (settle + direct table insert) and
+  stays exact, and the normal watermark path resumes afterwards;
+* **fold edge cases** — settling an empty buffer is a no-op that does
+  not count as a settle, and duplicate keys spanning buffer and table
+  keep their multiset counts through the two-stream fold (so
+  delete-one-copy semantics survive a settle);
+* **interruptibility** — a ``data.pipeline`` snapshot taken mid-settle
+  restores into a fresh pipeline bit-for-bit and keeps deduplicating.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import filters
+from repro.data.pipeline import DedupPipeline, PipelineConfig
+from repro.filters import steady
+
+
+def _keys(seed, n, lo=0, hi=2**32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64).astype(np.uint32))
+
+
+class TestSettleCursorExactness:
+    def test_no_false_negatives_at_every_cursor_position(self):
+        """Drive the drain one chunk-tick at a time; at every cursor the
+        settled prefix, both stream suffixes, and fresh buffered keys
+        must all answer MAY-CONTAIN."""
+        cfg, st = filters.make("steady_qf", q=10, r=16, buf_q=7, chunk=32)
+        old = _keys(0, 600)
+        st = filters.insert(cfg, st, old)
+        st = steady.settle_all(cfg, st)
+        buffered = _keys(1, 64, lo=2**31)
+        st = filters.insert(cfg, st, buffered)
+        st = steady._open_settle(cfg, st)  # arm: table + buffer -> streams
+        steps = 0
+        while bool((st.cursor < st.src_n) | (st.bcursor < st.bsrc_n)):
+            st = steady._drain(cfg, st, 1)
+            assert bool(filters.contains(cfg, st, old).all()), f"tick {steps}"
+            assert bool(filters.contains(cfg, st, buffered).all()), f"tick {steps}"
+            steps += 1
+        assert steps >= 5  # actually chunked, not one big pass
+        s = filters.stats(cfg, st)
+        assert int(s["n"]) == 600 + 64
+        assert not bool(s["overflow"])
+
+    def test_inserts_during_drain_stay_exact(self):
+        """Writer races the drain: keys inserted while a settle is open
+        land in the fresh buffer and must be visible immediately."""
+        cfg, st = filters.make(
+            "steady_qf", q=10, r=16, buf_q=7, chunk=32, settle_load=0.3
+        )
+        seen = []
+        for i in range(15):
+            b = _keys(100 + i, 48)
+            seen.append(np.asarray(b))
+            st = filters.insert(cfg, st, b)
+            allk = jnp.asarray(np.concatenate(seen))
+            assert bool(filters.contains(cfg, st, allk).all()), f"batch {i}"
+        s = filters.stats(cfg, st)
+        assert int(s["n"]) == 15 * 48
+        assert int(s["settles"]) >= 2  # the watermark actually tripped
+        assert not bool(s["overflow"])
+
+
+class TestForcedEarlySettle:
+    def test_oversized_batch_forces_settle_and_stays_exact(self):
+        cfg, st = filters.make("steady_qf", q=12, r=18, buf_q=8, chunk=64)
+        cap = cfg.buf.capacity
+        big = _keys(2, cap + 200)  # cannot fit the buffer: forced path
+        st = filters.insert(cfg, st, big)
+        assert bool(filters.contains(cfg, st, big).all())
+        s = filters.stats(cfg, st)
+        assert int(s["n"]) == cap + 200
+        assert int(s["buffered"]) == 0  # landed in the table, not the buffer
+        assert not bool(s["overflow"])
+        # the normal watermark path resumes after a forced insert
+        more = [_keys(3 + i, 64) for i in range(6)]
+        for b in more:
+            st = filters.insert(cfg, st, b)
+        assert bool(filters.contains(cfg, st, jnp.concatenate([big] + more)).all())
+        assert int(filters.stats(cfg, st)["n"]) == cap + 200 + 6 * 64
+
+    def test_forced_mid_settle_folds_pending_streams(self):
+        """A forced insert arriving while a settle is half-drained must
+        fold BOTH pending stream suffixes before the direct insert."""
+        cfg, st = filters.make("steady_qf", q=10, r=16, buf_q=7, chunk=16)
+        old = _keys(4, 500)
+        st = filters.insert(cfg, st, old)
+        st = steady.settle_all(cfg, st)
+        mid = _keys(5, 64, lo=2**31)
+        st = filters.insert(cfg, st, mid)
+        st = steady._open_settle(cfg, st)
+        st = steady._drain(cfg, st, 1)  # leave the settle half-done
+        assert bool((st.cursor < st.src_n) | (st.bcursor < st.bsrc_n))
+        big = _keys(6, cfg.buf.capacity + 50)
+        st = filters.insert(cfg, st, big)
+        for part in (old, mid, big):
+            assert bool(filters.contains(cfg, st, part).all())
+        assert int(filters.stats(cfg, st)["n"]) == 500 + 64 + cfg.buf.capacity + 50
+
+
+class TestFoldEdgeCases:
+    def test_settle_of_empty_buffer_is_a_counted_noop(self):
+        """settle_all on an idle filter changes nothing and does NOT
+        bump the settles counter (no work was pending)."""
+        cfg, st = filters.make("steady_qf", q=10, r=16, buf_q=7)
+        keys = _keys(7, 80)  # fits the buffer: the fold below is real
+        st = filters.insert(cfg, st, keys)
+        st = steady.settle_all(cfg, st)
+        before = filters.stats(cfg, st)
+        assert int(before["settles"]) >= 1  # the buffered fold counted
+        st = steady.settle_all(cfg, st)  # nothing buffered, nothing pending
+        after = filters.stats(cfg, st)
+        assert int(after["n"]) == int(before["n"]) == 80
+        assert int(after["settles"]) == int(before["settles"])
+        assert bool(filters.contains(cfg, st, keys).all())
+
+    def test_duplicates_spanning_buffer_and_table_keep_multiset_counts(self):
+        """One copy settled into the table + one copy still buffered:
+        the fold must keep BOTH, so delete-one-copy leaves a hit and a
+        second delete removes it."""
+        cfg, st = filters.make("steady_qf", q=10, r=16, buf_q=7)
+        dup = _keys(8, 50)
+        st = filters.insert(cfg, st, dup)
+        st = steady.settle_all(cfg, st)  # first copies now in the table
+        st = filters.insert(cfg, st, dup)  # second copies in the buffer
+        st = steady.settle_all(cfg, st)  # fold: table-stream meets dups
+        assert int(filters.stats(cfg, st)["n"]) == 100
+        st = filters.delete(cfg, st, dup)
+        assert bool(filters.contains(cfg, st, dup).all()), "second copies lost"
+        assert int(filters.stats(cfg, st)["n"]) == 50
+        st = filters.delete(cfg, st, dup)
+        assert int(filters.stats(cfg, st)["n"]) == 0
+
+    def test_merge_of_two_steady_filters_is_exact(self):
+        cfg, sa = filters.make("steady_qf", q=10, r=16, buf_q=7)
+        _, sb = filters.make("steady_qf", q=10, r=16, buf_q=7)
+        ka, kb = _keys(9, 300), _keys(10, 300, lo=2**31)
+        sa = filters.insert(cfg, sa, ka)
+        sb = filters.insert(cfg, sb, kb)  # sb still partly buffered
+        sm = filters.by_cfg(cfg).merge(cfg, sa, sb)
+        assert bool(filters.contains(cfg, sm, jnp.concatenate([ka, kb])).all())
+        assert int(filters.stats(cfg, sm)["n"]) == 600
+
+
+class TestPipelineSnapshotMidSettle:
+    def test_snapshot_restore_mid_settle_roundtrips_and_resumes(self):
+        """A checkpoint taken while the dedup filter is mid-drain must
+        restore bit-for-bit (every stream plane and cursor is a pytree
+        leaf) and keep deduplicating from that exact point."""
+        pcfg = PipelineConfig(
+            dedup_family="steady_qf",
+            dedup_ram_q=10,
+            dedup_p=26,
+            dedup_chunk=32,
+            seq_len=64,
+            batch_size=2,
+            seed=3,
+        )
+        pipe = DedupPipeline(pcfg)
+        ids0, _ = pipe.corpus.batch(500)
+        pipe._dedup(ids0)
+        # quiesce (an insert-opened settle may be in flight), buffer a
+        # fresh batch, then arm a settle and half-drain it so the
+        # snapshot is mid-stream
+        fcfg = pipe.filter_cfg
+        pipe.filter_state = steady.settle_all(fcfg, pipe.filter_state)
+        extra = _keys(11, 64, lo=2**31)
+        pipe.filter_state = filters.insert(fcfg, pipe.filter_state, extra)
+        pipe.filter_state = steady._open_settle(fcfg, pipe.filter_state)
+        pipe.filter_state = steady._drain(fcfg, pipe.filter_state, 1)
+        st = pipe.filter_state
+        assert bool((st.cursor < st.src_n) | (st.bcursor < st.bsrc_n))
+        snap = pipe.snapshot()
+
+        fresh = DedupPipeline(pcfg)
+        fresh.restore(snap)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(pipe.filter_state),
+            jax.tree_util.tree_leaves(fresh.filter_state),
+        ):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        # the restored filter still knows everything the original saw...
+        kept = np.unique(ids0)
+        assert bool(
+            filters.contains(fresh.filter_cfg, fresh.filter_state, jnp.asarray(kept)).all()
+        )
+        assert bool(filters.contains(fresh.filter_cfg, fresh.filter_state, extra).all())
+        # ...and a replay of the same documents dedups them all away
+        keep_again = fresh._dedup(ids0)
+        assert not keep_again.any()
+        # and the resumed settle drains to the exact population
+        fresh.filter_state = steady.settle_all(fresh.filter_cfg, fresh.filter_state)
+        s = filters.stats(fresh.filter_cfg, fresh.filter_state)
+        assert int(s["n"]) == len(kept) + extra.shape[0]
+        assert not bool(s["overflow"])
